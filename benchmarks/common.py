@@ -1,0 +1,36 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import csv
+import io
+from dataclasses import dataclass
+
+from repro.core import ModelDesc
+
+# The paper's evaluation models (§4): LLaMA-7B and GPT-3-style 13/22/175B.
+PAPER_MODELS: dict[str, ModelDesc] = {
+    "LLaMA_7B": ModelDesc("LLaMA_7B", n_layers=32, d_model=4096, n_heads=32,
+                          n_kv_heads=32, d_ff=11008, vocab=32000),
+    "GPT_13B": ModelDesc("GPT_13B", n_layers=40, d_model=5120, n_heads=40,
+                         n_kv_heads=40, d_ff=20480, vocab=50257,
+                         ffn_kind="gelu"),
+    "GPT_22B": ModelDesc("GPT_22B", n_layers=48, d_model=6144, n_heads=48,
+                         n_kv_heads=48, d_ff=24576, vocab=50257,
+                         ffn_kind="gelu"),
+    "GPT_175B": ModelDesc("GPT_175B", n_layers=96, d_model=12288, n_heads=96,
+                          n_kv_heads=96, d_ff=49152, vocab=50257,
+                          ffn_kind="gelu"),
+}
+
+
+def emit(rows: list[dict], title: str) -> str:
+    """Print a small CSV block (one per paper table/figure)."""
+    buf = io.StringIO()
+    if rows:
+        w = csv.DictWriter(buf, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+    out = f"# {title}\n{buf.getvalue()}"
+    print(out)
+    return out

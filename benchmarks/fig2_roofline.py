@@ -1,0 +1,50 @@
+"""Fig. 2 reproduction: attention-kernel throughput, H100 vs V100.
+
+The paper plots attention throughput saturating at a device-specific
+ceiling once the workload passes the roofline knee (Eq. 1-2).  We sweep the
+same kernel sizes through the cost model's per-device roofline and report
+attained TFLOP/s, expecting (a) both curves to saturate and (b) the H100
+ceiling ≈ 6-9x the V100 one (fused attention + higher peak).
+"""
+
+from __future__ import annotations
+
+from repro.core import DEVICE_PROFILES
+from benchmarks.common import emit
+
+
+def attention_op(batch: int, seq: int, heads: int = 32, hd: int = 128,
+                 *, fused: bool) -> tuple[float, float]:
+    """(flops, bytes) of one attention forward at bf16."""
+    d = heads * hd
+    proj = 2 * batch * seq * d * (3 * d) + 2 * batch * seq * d * d
+    scores = 4 * batch * heads * seq * seq * hd * 0.5
+    flops = proj + scores
+    io_qkv = 3 * batch * seq * d * 2 + 4 * d * d * 2 + batch * seq * d * 2
+    io_scores = 0.0 if fused else 3 * 4 * batch * heads * seq * seq * 0.5
+    return flops, io_qkv + io_scores
+
+
+def run() -> list[dict]:
+    rows = []
+    for dev_name in ("H100", "V100"):
+        spec = DEVICE_PROFILES[dev_name]
+        for seq in (128, 256, 512, 1024, 2048, 4096, 8192):
+            flops, byts = attention_op(8, seq, fused=spec.supports_fusion)
+            t = spec.roofline_time(flops, byts)
+            rows.append({"device": dev_name, "seq": seq,
+                         "tflops_attained": round(flops / t / 1e12, 1)})
+    # saturation + ceiling-gap checks (Fig. 2's qualitative claims)
+    for dev_name in ("H100", "V100"):
+        r = [x["tflops_attained"] for x in rows if x["device"] == dev_name]
+        assert r[-1] >= r[0]                       # rises to the knee
+        assert abs(r[-1] - r[-2]) / r[-1] < 0.15   # saturates
+    h = max(x["tflops_attained"] for x in rows if x["device"] == "H100")
+    v = max(x["tflops_attained"] for x in rows if x["device"] == "V100")
+    assert 4 <= h / v <= 14, (h, v)
+    emit(rows, "fig2_attention_roofline (H100 vs V100, saturating)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

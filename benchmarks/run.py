@@ -1,0 +1,53 @@
+"""Benchmark driver: one entry per paper table/figure + planner extras.
+
+PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small cluster sizes only")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_planner_search, fig2_roofline,
+                            fig3_allreduce_decomp, fig6a_hetero_similar,
+                            fig6b_hetero_disparate, fig6c_dynamic_bw)
+    suites = [
+        ("fig2_roofline", lambda: fig2_roofline.run()),
+        ("fig3_allreduce_decomp", lambda: fig3_allreduce_decomp.run()),
+        ("fig6a_hetero_similar",
+         lambda: fig6a_hetero_similar.run(quick=args.quick)),
+        ("fig6b_hetero_disparate",
+         lambda: fig6b_hetero_disparate.run(quick=args.quick)),
+        ("fig6c_dynamic_bw", lambda: fig6c_dynamic_bw.run(quick=args.quick)),
+        ("planner_search",
+         lambda: bench_planner_search.run(quick=args.quick)),
+    ]
+    failures = []
+    for name, fn in suites:
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.perf_counter()
+        try:
+            fn()
+            print(f"[{name}] PASS ({time.perf_counter() - t0:.1f}s)")
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+            print(f"[{name}] FAIL: {e!r}")
+    print("\n===== summary =====")
+    print(f"{len(suites) - len(failures)}/{len(suites)} benchmark suites "
+          f"passed" + (f"; FAILED: {failures}" if failures else ""))
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Serving example: batched prefill -> token-by-token decode.
+
+Runs a reduced config through the same prefill/serve steps the dry-run
+lowers at production scale (32k cache, 512 chips).
+
+PYTHONPATH=src python examples/serve.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.lm import LM
+
+cfg = get_config("gemma_7b").reduced()
+model = LM(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+B, S, GEN, MAXLEN = 4, 48, 16, 64
+requests = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+
+# prefill: last-token logits + packed kv cache (stacked layout)
+t0 = time.perf_counter()
+logits, stacked = model.prefill(params, requests)
+print(f"prefill  B={B} S={S}: {time.perf_counter()-t0:.2f}s "
+      f"logits {logits.shape}")
+
+# convert to the flat per-layer serving layout and right-size to MAXLEN
+flat = model.unstack_cache(stacked)
+cache = model.init_cache(B, MAXLEN)
+cache = jax.tree.map(
+    lambda dst, src: dst.at[tuple(slice(0, s) for s in src.shape)].set(src)
+    if dst.shape != src.shape else src, cache, flat)
+
+decode = jax.jit(model.decode_step, donate_argnums=(1,))
+tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+out = [tok]
+t0 = time.perf_counter()
+for t in range(GEN):
+    logits, cache = decode(params, cache, tok,
+                           jnp.full((B,), S + t, jnp.int32))
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out.append(tok)
+dt = time.perf_counter() - t0
+gen = jnp.concatenate(out, axis=1)
+print(f"decode   {GEN} steps x {B} seqs: {dt:.2f}s "
+      f"({B*GEN/dt:.1f} tok/s on CPU interpret path)")
+print("generated ids[0]:", gen[0].tolist())
+assert bool(jnp.isfinite(logits).all())
+print("OK")

@@ -1,0 +1,13 @@
+"""dbrx-132b [moe]: 40L d_model=6144 48H (GQA kv=8) expert d_ff=10752
+vocab=100352, 16 experts top-4 (fine-grained).
+[hf:databricks/dbrx-base; unverified]
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="dbrx-132b",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=10752, vocab=100352,
+    n_experts=16, top_k=4,
+    ffn_kind="swiglu", rope_theta=5e5,
+)

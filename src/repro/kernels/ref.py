@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (the unfused baselines).
+
+These deliberately materialize the full S×S score matrix / intermediate
+tensors — they are the "before fusion" cost-model entries (paper §2.3) and
+the ground truth for the kernel allclose sweeps in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  softcap: float = 0.0) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd), H % KV == 0 (GQA).
+
+    Returns (B, Sq, H, hd).  Unfused: scores materialized in fp32.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqhgk,bshk->bhgqs", qg, k).astype(jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(hd))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqs,bshk->bqhgk", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, hd)
+
+
+def rmsnorm_reference(x: jax.Array, w: jax.Array,
+                      eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+            ).astype(x.dtype)

@@ -1,0 +1,147 @@
+"""Logical→physical axis mapping (MaxText-style) with divisibility fallback.
+
+Models annotate every parameter and key activation with *logical* axis names
+("batch", "heads", "mlp", ...).  A :class:`AxisRules` table maps logical
+names onto physical mesh axes ("pod", "data", "model").  The mapping is the
+hook through which a :class:`repro.core.plans.ParallelPlan` steers JAX
+sharding: the planner's choices (TP on heads vs sequence, ZeRO-3 on the data
+axis, EP on the model axis) are expressed as rule-table edits, and GSPMD
+materializes the collectives.
+
+Divisibility fallback: a logical dim whose size is not divisible by the
+mapped mesh-axis extent is silently replicated for that dim (e.g. qwen2's 28
+query heads on a 16-way model axis), and the attention layer then switches to
+sequence sharding — the paper's "operator splitting picks a different axis"
+in JAX terms.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# A logical→physical entry maps a logical axis name to one physical mesh axis
+# or a tuple of them (major-to-minor).
+Physical = tuple[str, ...]
+
+DEFAULT_RULES: dict[str, Physical] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": (),                 # query sequence: unsharded by default
+    "seq_shard": ("model",),   # context-parallel fallback for attention
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_mlp": ("data",),   # 2-D expert TP (see layers.moe_defs)
+    "expert_in": (),
+    "kv_seq": (),              # kv cache length (split-KV decode may shard)
+    # parameters
+    "fsdp": ("data",),         # ZeRO-3 dim when plan.zero3 (else remapped to ())
+    "layers": (),
+    "conv": (),
+    "state": (),
+}
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    """Immutable rule table; planners derive edited copies."""
+
+    rules: Mapping[str, Physical] = field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def updated(self, **edits: Physical) -> "AxisRules":
+        r = dict(self.rules)
+        r.update(edits)
+        return AxisRules(r)
+
+    def physical(self, logical: str | None) -> Physical:
+        if logical is None:
+            return ()
+        if logical not in self.rules:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        return self.rules[logical]
+
+    # -- spec building ---------------------------------------------------------
+
+    def spec(self, logical_axes: Sequence[str | None],
+             shape: Sequence[int] | None = None,
+             mesh: Mesh | None = None) -> P:
+        """PartitionSpec for a tensor annotated with logical axes.
+
+        With ``shape``+``mesh``, drops mesh axes that do not divide the dim
+        (divisibility fallback) and axes absent from the mesh (e.g. "pod" on
+        the single-pod mesh).
+        """
+        entries: list[tuple[str, ...] | None] = []
+        used: set[str] = set()
+        for i, name in enumerate(logical_axes):
+            phys = [a for a in self.physical(name) if a not in used]
+            if mesh is not None:
+                phys = [a for a in phys if a in mesh.shape]
+            if shape is not None and mesh is not None and phys:
+                extent = math.prod(mesh.shape[a] for a in phys)
+                while phys and shape[i] % extent != 0:
+                    phys.pop()           # drop minor-most until divisible
+                    extent = math.prod(mesh.shape[a] for a in phys) if phys else 1
+            used.update(phys)
+            entries.append(tuple(phys) if phys else None)
+        # strip trailing Nones for a tidy spec
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding(self, logical_axes: Sequence[str | None],
+                 shape: Sequence[int], mesh: Mesh) -> NamedSharding:
+        return NamedSharding(mesh, self.spec(logical_axes, shape, mesh))
+
+    def shardable(self, logical: str, size: int, mesh: Mesh) -> bool:
+        phys = [a for a in self.physical(logical) if a in mesh.shape]
+        extent = math.prod(mesh.shape[a] for a in phys) if phys else 1
+        return extent > 1 and size % extent == 0
+
+
+# ---------------------------------------------------------------------------
+# Activation-constraint helper
+# ---------------------------------------------------------------------------
+
+# Set by `use_rules(mesh, rules)`; None => constraints are no-ops (CPU smoke).
+_ACTIVE: list[tuple[Mesh, AxisRules]] = []
+
+
+class use_rules:
+    """Context manager activating sharding constraints inside model code."""
+
+    def __init__(self, mesh: Mesh | None, rules: AxisRules | None = None):
+        self.pair = (mesh, rules or AxisRules()) if mesh is not None else None
+
+    def __enter__(self):
+        if self.pair is not None:
+            _ACTIVE.append(self.pair)  # type: ignore[arg-type]
+        return self
+
+    def __exit__(self, *exc):
+        if self.pair is not None:
+            _ACTIVE.pop()
+        return False
+
+
+def shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without active mesh)."""
+    if not _ACTIVE:
+        return x
+    mesh, rules = _ACTIVE[-1]
+    spec = rules.spec(logical_axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def active_rules() -> tuple[Mesh, AxisRules] | None:
+    return _ACTIVE[-1] if _ACTIVE else None

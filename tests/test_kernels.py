@@ -1,0 +1,100 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret=True on CPU).
+
+Shape/dtype sweep per kernel as required: GQA ratios, causal/window,
+decode (Sq=1), non-square, odd head counts, bf16/f32.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+
+CASES = [
+    # (B, Sq, Skv, H, KV, hd, causal, window)
+    (2, 128, 128, 4, 2, 64, True, 0),
+    (1, 64, 256, 8, 8, 32, True, 0),       # cross/decode-aligned
+    (2, 128, 128, 4, 4, 64, True, 48),     # sliding window
+    (1, 1, 128, 4, 2, 64, True, 0),        # single-token decode
+    (2, 96, 96, 6, 2, 32, False, 0),       # bidirectional (encoder)
+    (1, 256, 256, 2, 1, 128, True, 0),     # MQA, MXU-aligned head_dim
+    (1, 32, 32, 4, 4, 16, True, 8),        # tiny window
+]
+
+
+@pytest.mark.parametrize("case", CASES, ids=[str(c) for c in CASES])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_reference(case, dtype):
+    B, Sq, Skv, H, KV, hd, causal, window = case
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2**31), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, KV, hd), dtype)
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        block_q=32, block_kv=32, interpret=True)
+    r = ref.mha_reference(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("blocks", [(16, 16), (32, 64), (64, 32), (128, 128)])
+def test_flash_attention_block_shape_invariance(blocks):
+    """Output must not depend on the BlockSpec tiling."""
+    bq, bk = blocks
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64))
+    k = jax.random.normal(ks[1], (1, 128, 2, 64))
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+    o = flash_attention(q, k, v, causal=True, block_q=bq, block_kv=bk,
+                        interpret=True)
+    r = ref.mha_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(o, r, atol=3e-5, rtol=3e-5)
+
+
+def test_flash_attention_softcap():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 32)) * 3
+    k = jax.random.normal(ks[1], (1, 64, 2, 32)) * 3
+    v = jax.random.normal(ks[2], (1, 64, 2, 32))
+    o = flash_attention(q, k, v, causal=True, softcap=20.0,
+                        block_q=32, block_kv=32, interpret=True)
+    r = ref.mha_reference(q, k, v, causal=True, softcap=20.0)
+    np.testing.assert_allclose(o, r, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(4, 37, 128), (1, 1, 256), (8, 512),
+                                   (2, 3, 5, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_reference(shape, dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, shape, dtype)
+    w = (jax.random.normal(key, shape[-1:]) * 0.1 + 1).astype(dtype)
+    o = rmsnorm(x, w, interpret=True)
+    r = ref.rmsnorm_reference(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_grad_flows():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 32, 2, 32))
+    k = jax.random.normal(ks[1], (1, 32, 2, 32))
+    v = jax.random.normal(ks[2], (1, 32, 2, 32))
+
+    def f(q):
+        return jnp.sum(flash_attention(q, k, v, causal=True, block_q=16,
+                                       block_kv=16, interpret=True) ** 2)
+
+    def fr(q):
+        return jnp.sum(ref.mha_reference(q, k, v, causal=True) ** 2)
+
+    g = jax.grad(f)(q)
+    gr = jax.grad(fr)(q)
+    np.testing.assert_allclose(g, gr, atol=1e-3, rtol=1e-3)

@@ -1,0 +1,120 @@
+"""Property-based tests (hypothesis) for the planner/simulator invariants."""
+
+import math
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ClusterTopology, DeviceInstance, DeviceSpec, Edge,
+                        OpGraph, OpNode, branch_and_bound_assign,
+                        bnb_layer_split, exhaustive_assign, greedy_assign,
+                        simulate_schedule, ModelDesc)
+from repro.core.planner import _stage_rate
+
+
+@st.composite
+def graph_and_cluster(draw):
+    n_ops = draw(st.integers(2, 5))
+    n_dev = draw(st.integers(2, 3))
+    g = OpGraph()
+    for i in range(n_ops):
+        g.add(OpNode(f"op{i}", "mm",
+                     flops=draw(st.floats(1e10, 1e13)),
+                     bytes_accessed=draw(st.floats(1e6, 1e9)),
+                     mem_required=1e6,
+                     out_bytes=draw(st.floats(1e5, 1e8))))
+    # random DAG edges i -> j (i < j)
+    for j in range(1, n_ops):
+        for i in range(j):
+            if draw(st.booleans()):
+                g.connect(f"op{i}", f"op{j}")
+    devs = []
+    for d in range(n_dev):
+        peak = draw(st.floats(1e13, 2e14))
+        devs.append(DeviceInstance(d, DeviceSpec(f"d{d}", peak, 1e12, 64e9)))
+    topo = ClusterTopology(devs)
+    for a in range(n_dev):
+        for b in range(a + 1, n_dev):
+            topo.add_link(a, b, Edge(draw(st.floats(1e9, 1e11)), 1e-6, "l"))
+    return g, topo
+
+
+@settings(max_examples=25, deadline=None)
+@given(graph_and_cluster())
+def test_bnb_optimal_and_sound(gc):
+    """Alg. 1 soundness: equals exhaustive optimum, never beats it (the
+    bound is admissible), and never loses to its own greedy warm start."""
+    g, topo = gc
+    a_ex, c_ex = exhaustive_assign(g, topo)
+    a_bb, c_bb, stats = branch_and_bound_assign(g, topo, n_workers=2)
+    assert c_bb <= simulate_schedule(g, greedy_assign(g, topo), topo).makespan + 1e-9
+    assert c_bb == pytest.approx(c_ex, rel=1e-6, abs=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graph_and_cluster())
+def test_simulated_schedule_respects_dependencies(gc):
+    g, topo = gc
+    assignment = greedy_assign(g, topo)
+    res = simulate_schedule(g, assignment, topo)
+    for (u, v) in g.edges:
+        assert res.op_start[v] >= res.op_end[u] - 1e-9
+    # busy time never exceeds makespan per device
+    for d, busy in res.device_busy.items():
+        assert busy <= res.makespan + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 4), st.integers(6, 24),
+       st.lists(st.floats(0.3, 3.0), min_size=2, max_size=4))
+def test_layer_split_partitions_exactly(n_stages_raw, n_layers, speeds):
+    n_stages = min(len(speeds), n_stages_raw, n_layers)
+    speeds = speeds[:n_stages]
+    desc = ModelDesc(name="m", n_layers=n_layers, d_model=256, n_heads=4,
+                     n_kv_heads=4, d_ff=1024, vocab=1000)
+    devs = [DeviceInstance(i, DeviceSpec(f"d{i}", s * 1e14, 1e12, 640e9))
+            for i, s in enumerate(speeds)]
+    topo = ClusterTopology(devs)
+    groups = [[i] for i in range(n_stages)]
+    sizes, _ = bnb_layer_split(desc, topo, groups, tp=1, batch=4, seq=128)
+    assert len(sizes) == n_stages
+    assert sum(sizes) == n_layers
+    assert all(s >= 1 for s in sizes)
+    # optimality: no single-layer move improves the bottleneck
+    from repro.core.opgraph import layer_flops
+    costs = [layer_flops(desc, i, 4, 128) * 3 for i in range(n_layers)]
+    rates = [_stage_rate(topo, gr, 1) for gr in groups]
+
+    def bottleneck(sz):
+        t, lo = 0.0, 0
+        for s, k in enumerate(sz):
+            t = max(t, sum(costs[lo:lo + k]) / rates[s])
+            lo += k
+        return t
+
+    base = bottleneck(sizes)
+    for i in range(n_stages - 1):
+        for delta in (-1, 1):
+            cand = list(sizes)
+            cand[i] += delta
+            cand[i + 1] -= delta
+            if min(cand) >= 1:
+                assert bottleneck(cand) >= base - 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(0.05, 1.0))
+def test_slowdown_never_speeds_up_schedule(factor):
+    g = OpGraph()
+    g.add(OpNode("a", "mm", flops=1e12, out_bytes=1e6))
+    g.add(OpNode("b", "mm", flops=1e12))
+    g.connect("a", "b")
+    spec = DeviceSpec("d", 1e14, 1e12, 64e9)
+    topo = ClusterTopology([DeviceInstance(0, spec), DeviceInstance(1, spec)])
+    topo.add_link(0, 1, Edge(1e10, 1e-6, "l"))
+    base = simulate_schedule(g, {"a": 0, "b": 1}, topo).makespan
+    topo.devices[1].perf_factor = factor
+    slowed = simulate_schedule(g, {"a": 0, "b": 1}, topo).makespan
+    assert slowed >= base - 1e-12

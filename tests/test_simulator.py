@@ -1,0 +1,114 @@
+"""Discrete-event simulator: the paper's constraint system Eq. 4-7."""
+
+import math
+
+import pytest
+
+from repro.core import (ClusterTopology, CommOp, DeviceInstance, Edge,
+                        ModelDesc, NetworkEvent, OpGraph, OpNode,
+                        ParallelPlan, build_llm_graph, check_memory,
+                        hetero_cluster, homogeneous_cluster, memory_feasible,
+                        simulate_schedule, simulate_training_step,
+                        megatron_default_plan, simulate_epoch)
+
+DESC = ModelDesc(name="tiny", n_layers=8, d_model=512, n_heads=8,
+                 n_kv_heads=8, d_ff=2048, vocab=32000)
+
+
+def chain_graph(n=4, flops=1e12, out_bytes=1e8) -> OpGraph:
+    g = OpGraph()
+    prev = None
+    for i in range(n):
+        g.add(OpNode(f"op{i}", "mm", flops=flops, bytes_accessed=1e9,
+                     mem_required=1e9, out_bytes=out_bytes))
+        if prev:
+            g.connect(prev, f"op{i}")
+        prev = f"op{i}"
+    return g
+
+
+def test_dependencies_respected_eq4_eq5():
+    topo = homogeneous_cluster(2, "V100", gpus_per_node=1, inter_bw=10e9)
+    g = chain_graph(4)
+    assignment = {"op0": 0, "op1": 1, "op2": 0, "op3": 1}
+    res = simulate_schedule(g, assignment, topo)
+    for (u, v) in g.edges:
+        assert res.op_start[v] >= res.op_end[u] - 1e-12   # Eq. 4/5
+    # cross-device hops pay transfer time
+    assert res.comm_bytes == pytest.approx(3e8)
+    assert res.makespan > 4 * 1e12 / (112e12 * 0.65)
+
+
+def test_same_device_chain_no_comm():
+    topo = homogeneous_cluster(2, "V100", gpus_per_node=2)
+    g = chain_graph(4)
+    res = simulate_schedule(g, {f"op{i}": 0 for i in range(4)}, topo)
+    assert res.comm_bytes == 0
+
+
+def test_memory_constraint_eq6():
+    topo = homogeneous_cluster(1, "V100", gpus_per_node=1)
+    g = chain_graph(2, flops=1e9)
+    g.nodes["op0"].params_bytes = 40e9       # > 32 GB V100
+    assert not memory_feasible(g, {"op0": 0, "op1": 0}, topo)
+    g.nodes["op0"].params_bytes = 1e9
+    assert memory_feasible(g, {"op0": 0, "op1": 0}, topo)
+
+
+def test_bandwidth_event_slows_transfers_eq7():
+    def run(factor):
+        topo = homogeneous_cluster(2, "V100", gpus_per_node=1,
+                                   inter_bw=10e9)
+        topo.events = [NetworkEvent(0.0, "bandwidth", factor=factor,
+                                    selector="ib")]
+        g = chain_graph(2, flops=1e9, out_bytes=1e9)
+        return simulate_schedule(g, {"op0": 0, "op1": 1}, topo,
+                                 start_time=0.0).makespan
+    assert run(0.1) > run(1.0)
+
+
+def test_conflicting_edges_serialize():
+    """Fig. 5b: NVLink and PCIe on one pair cannot be used concurrently."""
+    devs = [DeviceInstance(i, homogeneous_cluster(1, "V100")
+                           .device(0).spec) for i in range(3)]
+    topo = ClusterTopology(devs)
+    topo.add_link(0, 1, Edge(100e9, 0.0, "nvlink", ("pcie",)),
+                  Edge(100e9, 0.0, "pcie", ("nvlink",)))
+    g = OpGraph()
+    g.add(OpNode("a", "mm", flops=1e9, out_bytes=100e9))
+    g.add(OpNode("b", "mm", flops=1e9, out_bytes=100e9))
+    g.add(OpNode("c", "mm", flops=1e9))
+    g.add(OpNode("d", "mm", flops=1e9))
+    g.connect("a", "c")
+    g.connect("b", "d")
+    res = simulate_schedule(g, {"a": 0, "b": 0, "c": 1, "d": 1}, topo)
+    # two 1s transfers over conflicting 100GB/s edges must serialize: ~2s
+    assert res.makespan >= 2.0
+
+
+def test_training_step_tp_reduces_compute_increases_comm():
+    topo = homogeneous_cluster(8, "V100", gpus_per_node=8)
+    p1 = megatron_default_plan(topo, DESC, microbatches=4)
+    s_tp = simulate_training_step(p1, DESC, topo, global_batch=32, seq=1024)
+    assert s_tp.step_time > 0 and math.isfinite(s_tp.step_time)
+    assert s_tp.tp_comm_time > 0 if p1.tp > 1 else True
+
+
+def test_1f1b_bubble_shrinks_with_microbatches():
+    from repro.core.simulator import _simulate_1f1b
+    fwd, bwd, p2p = [1.0] * 4, [2.0] * 4, [0.0] * 3
+    t_small = _simulate_1f1b(fwd, bwd, p2p, 4)
+    t_big = _simulate_1f1b(fwd, bwd, p2p, 16)
+    # per-microbatch cost improves as the pipeline fills
+    assert t_big / 16 < t_small / 4
+    # lower bound: work of one stage
+    assert t_big >= 16 * 3.0
+
+
+def test_epoch_with_replan_counts():
+    topo = hetero_cluster({"RTX4090D": 4, "V100": 4}, gpus_per_node=4)
+    topo.events = [NetworkEvent(0.05, "slowdown", device_id=0, factor=0.5)]
+    plan = megatron_default_plan(topo, DESC, microbatches=4)
+    sim = simulate_epoch(plan, DESC, topo, global_batch=32, seq=512,
+                         steps=3, replan_fn=lambda t, at: plan)
+    assert sim.steps == 3 and sim.replans >= 1
