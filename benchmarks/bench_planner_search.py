@@ -10,10 +10,10 @@ from __future__ import annotations
 import time
 
 from repro.core import (enumerate_strategies, hetero_cluster, plan_hybrid)
-from benchmarks.common import PAPER_MODELS, emit
+from benchmarks.common import PAPER_MODELS, emit, write_json
 
 
-def run(quick: bool = False) -> list[dict]:
+def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
     rows = []
     desc = PAPER_MODELS["LLaMA_7B"]
     for n in (16, 64) if not quick else (16,):
@@ -25,18 +25,28 @@ def run(quick: bool = False) -> list[dict]:
                     n_workers=1, with_baseline=False, max_candidates=128)
         t_serial = time.perf_counter() - t1
         t2 = time.perf_counter()
-        plan_hybrid(topo, desc, global_batch=4 * n, seq=2048,
-                    n_workers=8, with_baseline=False, max_candidates=128)
+        res = plan_hybrid(topo, desc, global_batch=4 * n, seq=2048,
+                          n_workers=8, with_baseline=False,
+                          max_candidates=128)
         t_par = time.perf_counter() - t2
         rows.append({"gpus": n, "candidates": len(pts),
                      "pruned": stats.pruned + stats.infeasible,
+                     "rejected": res.candidates_rejected,
                      "search_1thread_s": round(t_serial, 2),
                      "search_8threads_s": round(t_par, 2),
                      "parallel_speedup": round(t_serial / max(t_par, 1e-9),
                                                2)})
     emit(rows, "planner_search (pruning + parallel simulation, Alg. 1)")
+    if json_path:
+        write_json(rows, json_path)
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, help="write rows as JSON")
+    args = ap.parse_args()
+    run(quick=args.quick, json_path=args.json)

@@ -24,6 +24,19 @@ PAPER_MODELS: dict[str, ModelDesc] = {
 }
 
 
+def write_json(rows: list[dict], path: str) -> None:
+    """Persist benchmark rows as JSON (CI uploads these as artifacts so the
+    BENCH_* trajectory accumulates across commits)."""
+    import json
+    from pathlib import Path
+
+    p = Path(path)
+    if p.parent != Path("."):
+        p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(rows, indent=2, sort_keys=True))
+    print(f"[bench] wrote {len(rows)} rows -> {p}")
+
+
 def emit(rows: list[dict], title: str) -> str:
     """Print a small CSV block (one per paper table/figure)."""
     buf = io.StringIO()

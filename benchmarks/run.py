@@ -17,9 +17,10 @@ def main() -> None:
                     help="small cluster sizes only")
     args = ap.parse_args()
 
-    from benchmarks import (bench_planner_search, fig2_roofline,
-                            fig3_allreduce_decomp, fig6a_hetero_similar,
-                            fig6b_hetero_disparate, fig6c_dynamic_bw)
+    from benchmarks import (bench_planner_search, bench_replan,
+                            fig2_roofline, fig3_allreduce_decomp,
+                            fig6a_hetero_similar, fig6b_hetero_disparate,
+                            fig6c_dynamic_bw)
     suites = [
         ("fig2_roofline", lambda: fig2_roofline.run()),
         ("fig3_allreduce_decomp", lambda: fig3_allreduce_decomp.run()),
@@ -30,6 +31,7 @@ def main() -> None:
         ("fig6c_dynamic_bw", lambda: fig6c_dynamic_bw.run(quick=args.quick)),
         ("planner_search",
          lambda: bench_planner_search.run(quick=args.quick)),
+        ("bench_replan", lambda: bench_replan.run(quick=args.quick)),
     ]
     failures = []
     for name, fn in suites:

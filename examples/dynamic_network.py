@@ -39,5 +39,7 @@ for rec in trainer._orch.history:
     print(f"  t={rec.time:5.1f} {rec.event.kind:9s} -> {rec.action:20s} "
           f"predicted step {rec.old_step_time*1e3:7.1f} -> "
           f"{rec.new_step_time*1e3:7.1f} ms")
+print("\nincremental re-planning engine telemetry:")
+print(trainer._engine.describe())
 print(f"\n{trainer.replans} re-plans; final loss {hist[-1]['loss']:.3f} "
       f"(training continued through all events)")

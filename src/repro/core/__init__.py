@@ -10,6 +10,8 @@ from .costmodel import (MeshCollectiveModel, allreduce_time, collective_time,
                         graph_compute_lower_bound, op_time, transfer_time)
 from .dynamic import (AdaptationRecord, DynamicOrchestrator, PlanTemplates,
                       reassign_for_straggler)
+from .engine import (CacheStats, ReplanEngine, ReplanResult, StrategyCache,
+                     TopologyFingerprint, fingerprint_topology)
 from .opgraph import (CommOp, ModelDesc, OpGraph, OpNode, allreduce_decomposed,
                       allreduce_naive, build_llm_graph, layer_costs,
                       layer_flops)
@@ -17,7 +19,8 @@ from .planner import (PlanResult, SearchStats, StrategyPoint,
                       megatron_tuned_plan,
                       branch_and_bound_assign, bnb_layer_split,
                       enumerate_strategies, exhaustive_assign, greedy_assign,
-                      hetero_batch_shares, materialize_plan, plan_hybrid)
+                      hetero_batch_shares, materialize_plan, plan_hybrid,
+                      point_lower_bound)
 from .plans import (ParallelPlan, StageAssignment, megatron_default_plan,
                     split_devices, stages_from_sizes, uniform_stages)
 from .simulator import (EpochSim, SimResult, StepSim, check_memory,

@@ -93,6 +93,11 @@ def reassign_for_straggler(plan: ParallelPlan, model: ModelDesc,
     batch shares against current perf factors, keeping dp/tp/pp fixed
     (ReCycle-style — no topology change, no checkpoint reload)."""
     groups = [list(st.device_ids) for st in plan.stages]
+    if not groups:
+        # plans built without explicit stages (templates, manual configs)
+        # get the default device grouping before re-balancing
+        from .plans import split_devices
+        groups = split_devices(topo, plan.dp, plan.tp, plan.pp)
     if plan.pp > 1:
         sizes, _ = bnb_layer_split(model, topo, groups, plan.tp,
                                    batch=batch, seq=seq)
@@ -131,15 +136,21 @@ class AdaptationRecord:
 class DynamicOrchestrator:
     """Drives plan adaptation over a temporal topology.
 
-    For each event: S2 slowdowns get the cheap local reassignment; S3
-    failures consult the precomputed templates; S1 bandwidth changes trigger
-    a full re-plan only if the current plan degrades by more than
-    ``replan_threshold``."""
+    With an incremental :class:`repro.core.engine.ReplanEngine` attached
+    (the default path wired by the trainer), every event goes through
+    ``engine.replan`` — warm cache re-scoring for bandwidth shifts, local
+    rebalance for stragglers, neighborhood-seeded search for device-set
+    changes.  Without one, the legacy seed behaviour applies: S2 slowdowns
+    get the cheap local reassignment; S3 failures consult the precomputed
+    templates; S1 bandwidth changes trigger a full re-plan only if the
+    current plan degrades by more than ``replan_threshold``."""
 
     model: ModelDesc
     global_batch: int
     seq: int
     templates: PlanTemplates | None = None
+    engine: "object | None" = None       # ReplanEngine (duck-typed; avoids
+    #                                      a core.engine import cycle)
     replan_threshold: float = 1.10
     history: list[AdaptationRecord] = field(default_factory=list)
 
@@ -158,6 +169,28 @@ class DynamicOrchestrator:
         except (ValueError, ZeroDivisionError):
             old = _Inf()      # old plan infeasible on new topology (dead
             #                   stage after S3) -> any re-plan wins
+        if self.engine is not None:
+            if not isinstance(old, _Inf) \
+                    and self.engine._device_key is not None:
+                # the caller's *running* plan becomes the incumbent so warm
+                # paths rebalance it (the engine's cached portfolio from its
+                # cold plan stays valid for the same device set).  An engine
+                # that never cold-planned has no pre-event baseline to
+                # classify the delta against — leave incumbent unset and let
+                # replan() take its cold path.
+                self.engine.incumbent = (plan, old)
+            res = self.engine.replan(snap, event)
+            new_plan, action = res.plan, res.path
+            new_step = res.predicted.step_time     # scored on this snapshot
+            if action == "bandwidth-rescore" and \
+                    old.step_time / max(res.predicted.step_time, 1e-12) \
+                    < self.replan_threshold:
+                # not worth a plan switch: keep the running plan
+                new_plan, action, new_step = plan, "keep", old.step_time
+            self.history.append(AdaptationRecord(
+                time=event.time, event=event, action=action,
+                old_step_time=old.step_time, new_step_time=new_step))
+            return new_plan
         if event.kind == "fail":
             n_alive = len(snap.alive_ids())
             if self.templates is not None:

@@ -1,0 +1,633 @@
+"""Incremental re-planning engine with a persistent strategy cache.
+
+The paper's adaptability claim (§2.2) only holds if re-planning is cheap
+enough to run *during* training when the network shifts.  The seed planner
+re-enumerated and re-simulated every candidate from scratch on every
+topology event; this module makes re-planning incremental:
+
+  * :class:`TopologyFingerprint` — canonical, quantized hash of the alive
+    device set (spec + perf-factor bucket) and the effective edge bandwidths
+    (log-scale buckets), so "the same topology modulo noise" maps to the
+    same cache key while a real change maps to a new one.
+  * :class:`StrategyCache` — LRU-bounded memo of ``enumerate_strategies``
+    output, per-:class:`StrategyPoint` materialized plans, and simulator
+    scores, keyed by fingerprint context.  Hit/miss telemetry folds into
+    :class:`SearchStats`.
+  * :class:`ReplanEngine` — the ``replan(topo, event)`` entry point.  It
+    classifies the topology delta and picks the cheapest sound path:
+
+    ========== ============== ==================================================
+    event      device set     re-plan path
+    ========== ============== ==================================================
+    bandwidth  unchanged      re-score cached materialized plans (simulation
+                              only — no enumeration, no layer B&B); only the
+                              top-K candidates ranked by a bandwidth-adjusted
+                              estimate of their previous score are simulated.
+    slowdown   unchanged      ReCycle-style local rebalance of the incumbent
+                              (layer split + batch shares) *plus* the top-K
+                              re-score above; best of both wins.
+    fail/join  changed        seed a bounded search from the incumbent plan's
+                              strategy neighborhood (dp/tp/pp within a factor
+                              of 2); fall back to full enumeration — with the
+                              neighborhood winner's score as the pruning
+                              bound — only when the neighborhood is infeasible.
+    ========== ============== ==================================================
+
+The engine's cold path *is* :func:`repro.core.planner.plan_hybrid` (with the
+cache threaded through), so warm results stay comparable to a from-scratch
+plan; `benchmarks/bench_replan.py` measures the latency gap and
+`tests/test_engine.py` checks warm/cold step-time equivalence.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import math
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Sequence
+
+from .cluster import ClusterTopology, NetworkEvent
+from .opgraph import ModelDesc
+from .planner import SearchStats, StrategyPoint, _divisors, plan_hybrid
+from .plans import ParallelPlan
+from .simulator import StepSim, simulate_training_step
+
+# ---------------------------------------------------------------------------
+# Topology fingerprinting
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TopologyFingerprint:
+    """Canonical quantized view of a topology snapshot.
+
+    ``devices``: sorted (device_id, spec name, perf-factor bucket) triples of
+    the alive set.  ``edges``: sorted (a, b, tag, bandwidth bucket) tuples of
+    the edges between alive devices.  Bandwidth buckets are log2-scale, so a
+    few-percent wobble keeps the key stable while a real shift (2x drop, link
+    swap) moves to a new bucket and therefore a new key.
+    """
+
+    devices: tuple[tuple[int, str, int], ...]
+    edges: tuple[tuple[int, int, str, int], ...]
+
+    @property
+    def key(self) -> str:
+        return hashlib.sha1(repr((self.devices, self.edges))
+                            .encode()).hexdigest()[:16]
+
+    @property
+    def device_key(self) -> tuple[tuple[int, str], ...]:
+        """Identity of the alive device set, ignoring perf factors — used to
+        classify a delta as device-set-changing (fail/join) or not."""
+        return tuple((i, name) for i, name, _ in self.devices)
+
+
+def fingerprint_topology(topo: ClusterTopology, *, bw_quant: float = 0.25,
+                         perf_quant: float = 0.05) -> TopologyFingerprint:
+    """Fingerprint the *current* state of ``topo`` (apply events/snapshot
+    first if you need a particular time).
+
+    ``bw_quant``: bucket width in log2(bytes/s) — 0.25 means edges within
+    ~±9% of a bucket center hash identically.  ``perf_quant``: linear bucket
+    width for device perf factors.
+    """
+    devices = tuple(sorted(
+        (d.device_id, d.spec.name, int(round(d.perf_factor / perf_quant)))
+        for d in topo.alive_devices))
+    alive = {d.device_id for d in topo.alive_devices}
+    edges = []
+    for (a, b), link in sorted(topo.links.items()):
+        if a not in alive or b not in alive:
+            continue
+        for e in link.edges:
+            bw = e.effective_bandwidth
+            bucket = int(round(math.log2(bw) / bw_quant)) if bw > 0 else -1
+            edges.append((a, b, e.tag, bucket))
+    return TopologyFingerprint(devices, tuple(sorted(edges)))
+
+
+# ---------------------------------------------------------------------------
+# Strategy cache
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class _CacheEntry:
+    """Everything memoized for one (fingerprint, model, batch, seq) context."""
+
+    __slots__ = ("points", "plans", "scores")
+
+    def __init__(self) -> None:
+        self.points: list[StrategyPoint] | None = None
+        # (StrategyPoint, refine_layers) -> materialized ParallelPlan
+        self.plans: dict[tuple[StrategyPoint, bool], ParallelPlan] = {}
+        # structural plan key -> StepSim
+        self.scores: dict[tuple, StepSim] = {}
+
+
+def _plan_key(plan: ParallelPlan) -> tuple:
+    """Structural identity of a plan — everything the simulator reads.
+    ``meta`` is deliberately excluded: plans differing only in provenance
+    share one score."""
+    return (plan.dp, plan.tp, plan.pp, plan.ep, plan.sp, plan.microbatches,
+            plan.stages, plan.batch_shares, plan.grad_sync, plan.zero1,
+            plan.remat, plan.grad_compression)
+
+
+class _CacheContext:
+    """Handle bound to one cache entry; the duck-typed interface
+    :func:`plan_hybrid` consumes.  Thread-safe (the planner scores
+    candidates from a thread pool)."""
+
+    def __init__(self, cache: "StrategyCache", entry: _CacheEntry):
+        self._cache = cache
+        self._entry = entry
+        self._hits = 0
+        self._misses = 0
+        self._lock = threading.Lock()
+
+    def _count(self, hit: bool) -> None:
+        with self._lock:
+            if hit:
+                self._hits += 1
+            else:
+                self._misses += 1
+        self._cache._count(hit)
+
+    def counters(self) -> tuple[int, int]:
+        with self._lock:
+            return self._hits, self._misses
+
+    # -- points ----------------------------------------------------------------
+
+    def get_points(self) -> list[StrategyPoint] | None:
+        pts = self._entry.points
+        self._count(pts is not None)
+        return list(pts) if pts is not None else None
+
+    def put_points(self, points: list[StrategyPoint]) -> None:
+        self._entry.points = list(points)
+
+    # -- materialized plans ----------------------------------------------------
+
+    def get_plan(self, point: StrategyPoint, refine: bool) -> ParallelPlan | None:
+        plan = self._entry.plans.get((point, refine))
+        self._count(plan is not None)
+        return plan
+
+    def put_plan(self, point: StrategyPoint, refine: bool,
+                 plan: ParallelPlan) -> None:
+        with self._lock:
+            self._entry.plans[(point, refine)] = plan
+
+    # -- simulator scores ------------------------------------------------------
+
+    def get_score(self, plan: ParallelPlan) -> StepSim | None:
+        sim = self._entry.scores.get(_plan_key(plan))
+        self._count(sim is not None)
+        return sim
+
+    def put_score(self, plan: ParallelPlan, sim: StepSim) -> None:
+        with self._lock:
+            self._entry.scores[_plan_key(plan)] = sim
+
+    # -- bulk view (warm re-scoring) -------------------------------------------
+
+    def materialized(self) -> list[tuple[tuple[StrategyPoint, bool],
+                                         ParallelPlan, StepSim | None]]:
+        """All materialized plans with their scores (if simulated)."""
+        with self._lock:
+            return [(key, plan, self._entry.scores.get(_plan_key(plan)))
+                    for key, plan in self._entry.plans.items()]
+
+
+class StrategyCache:
+    """LRU cache of planning work, keyed by topology fingerprint context.
+
+    One *entry* holds the strategy points, materialized plans and simulator
+    scores for one (fingerprint, model, global_batch, seq).  ``max_entries``
+    bounds memory; least-recently-used contexts are evicted.
+    """
+
+    def __init__(self, max_entries: int = 64, *, bw_quant: float = 0.25,
+                 perf_quant: float = 0.05):
+        self.max_entries = max_entries
+        self.bw_quant = bw_quant
+        self.perf_quant = perf_quant
+        self.stats = CacheStats()
+        self._entries: OrderedDict[tuple, _CacheEntry] = OrderedDict()
+        self._lock = threading.Lock()
+
+    def _count(self, hit: bool) -> None:
+        with self._lock:
+            if hit:
+                self.stats.hits += 1
+            else:
+                self.stats.misses += 1
+
+    def fingerprint(self, topo: ClusterTopology) -> TopologyFingerprint:
+        return fingerprint_topology(topo, bw_quant=self.bw_quant,
+                                    perf_quant=self.perf_quant)
+
+    def context(self, topo: ClusterTopology, model: ModelDesc, *,
+                global_batch: int, seq: int,
+                gpus_per_node: int = 8) -> _CacheContext:
+        fp = self.fingerprint(topo)
+        # gpus_per_node shapes enumerate_strategies output, so it is part
+        # of the context identity
+        key = (fp.key, model, global_batch, seq, gpus_per_node)
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                entry = _CacheEntry()
+                self._entries[key] = entry
+                while len(self._entries) > self.max_entries:
+                    self._entries.popitem(last=False)
+                    self.stats.evictions += 1
+            else:
+                self._entries.move_to_end(key)
+        return _CacheContext(self, entry)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+
+# ---------------------------------------------------------------------------
+# Re-planning engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ReplanResult:
+    """Outcome of one (cold or warm) planning call."""
+
+    plan: ParallelPlan
+    predicted: StepSim
+    path: str                     # cold-plan | bandwidth-rescore |
+    #                               straggler-rebalance | neighborhood |
+    #                               full-replan
+    wall_time: float
+    stats: SearchStats
+    cold: bool
+
+
+def _comm_scale_estimate(sim: StepSim, plan: ParallelPlan,
+                         ratio: float) -> float:
+    """Heuristic re-estimate of a plan's step time after every edge bandwidth
+    scales by ``ratio``.  Only used to *rank* cached candidates before the
+    top-K get truly re-simulated, so it needs the right shape, not accuracy:
+    the additive dp-sync term scales exactly, the in-pipeline collective
+    totals are normalized and clamped so comm-heavy plans move more than
+    compute-heavy ones."""
+    if ratio <= 0:
+        ratio = 1.0
+    inpipe = (sim.tp_comm_time + sim.pp_comm_time) / max(plan.dp, 1)
+    comm = min(sim.dp_sync_time + inpipe, 0.95 * sim.step_time)
+    return (sim.step_time - comm) + comm / ratio
+
+
+class ReplanEngine:
+    """Incremental re-planner for one (model, global_batch, seq) workload.
+
+    Call :meth:`plan` once to establish the incumbent (cold, full search),
+    then :meth:`replan` on every :class:`NetworkEvent`.  All paths share the
+    :class:`StrategyCache`, so repeated events on similar topologies keep
+    getting cheaper.
+    """
+
+    def __init__(self, model: ModelDesc, *, global_batch: int, seq: int,
+                 cache: StrategyCache | None = None,
+                 n_workers: int | None = None,
+                 max_candidates: int | None = None, rescore_top_k: int = 12,
+                 rescore_min_sims: int = 4, rescore_stop_margin: float = 1.35,
+                 gpus_per_node: int = 8):
+        self.model = model
+        self.global_batch = global_batch
+        self.seq = seq
+        self.cache = cache if cache is not None else StrategyCache()
+        self.n_workers = n_workers
+        self.max_candidates = max_candidates
+        self.rescore_top_k = rescore_top_k
+        self.rescore_min_sims = rescore_min_sims
+        self.rescore_stop_margin = rescore_stop_margin
+        self.gpus_per_node = gpus_per_node
+        self.incumbent: tuple[ParallelPlan, StepSim] | None = None
+        self._device_key: tuple | None = None
+        # last applied bandwidth factor per event selector, so consecutive
+        # S1 events rank by the *relative* change
+        self._bw_factor: dict[str | None, float] = {}
+        # (point-key, plan, last StepSim) portfolio for the current device set
+        self._portfolio: list[tuple[tuple[StrategyPoint, bool],
+                                    ParallelPlan, StepSim | None]] = []
+        self.history: list[ReplanResult] = []
+
+    # -- shared helpers --------------------------------------------------------
+
+    def _simulate(self, plan: ParallelPlan, topo: ClusterTopology,
+                  ctx: _CacheContext | None = None) -> StepSim | None:
+        if ctx is not None:
+            sim = ctx.get_score(plan)
+            if sim is not None:
+                return sim
+        try:
+            sim = simulate_training_step(plan, self.model, topo,
+                                         global_batch=self.global_batch,
+                                         seq=self.seq)
+        except (ValueError, ZeroDivisionError):
+            return None
+        if ctx is not None:
+            ctx.put_score(plan, sim)
+        return sim
+
+    def _finish(self, plan: ParallelPlan, sim: StepSim, path: str,
+                t0: float, stats: SearchStats, *, cold: bool,
+                topo: ClusterTopology, ctx: _CacheContext | None,
+                refresh_portfolio: bool = False) -> ReplanResult:
+        self.incumbent = (plan, sim)
+        self._device_key = self.cache.fingerprint(topo).device_key
+        if refresh_portfolio and ctx is not None:
+            # Rebuild the warm-start portfolio from the plans this full
+            # search materialized for its own context.  Strategy points that
+            # keep a stale prior score still rank in future re-scores.
+            stale = {key: s for key, _, s in self._portfolio if s is not None}
+            self._portfolio = [
+                (key, p, s if s is not None else stale.get(key))
+                for key, p, s in ctx.materialized()]
+        res = ReplanResult(plan=plan, predicted=sim, path=path,
+                           wall_time=time.perf_counter() - t0, stats=stats,
+                           cold=cold)
+        self.history.append(res)
+        return res
+
+    def score_plan(self, plan: ParallelPlan,
+                   topo: ClusterTopology) -> StepSim | None:
+        """Cache-backed simulation of an explicit plan.  Returns None when
+        the plan is infeasible on ``topo``.  Prefer :meth:`score_plans` for
+        a batch — the topology fingerprint is computed once per call."""
+        return self.score_plans([plan], topo)[0]
+
+    def score_plans(self, plans: Sequence[ParallelPlan],
+                    topo: ClusterTopology) -> list[StepSim | None]:
+        """Simulate explicit plans against one topology through the score
+        cache (one fingerprint/context for the whole batch).  Benchmarks
+        that sweep fixed configurations across dynamic network conditions
+        (fig6c) use this; scores repeat for free when the same condition is
+        scored again."""
+        ctx = self.cache.context(topo, self.model,
+                                 global_batch=self.global_batch, seq=self.seq,
+                                 gpus_per_node=self.gpus_per_node)
+        return [self._simulate(p, topo, ctx) for p in plans]
+
+    # -- cold path -------------------------------------------------------------
+
+    def plan(self, topo: ClusterTopology) -> ReplanResult:
+        """Full search (enumerate + materialize + simulate), cache-backed.
+        Establishes the incumbent plan and the warm-start portfolio."""
+        t0 = time.perf_counter()
+        ctx = self.cache.context(topo, self.model,
+                                 global_batch=self.global_batch, seq=self.seq,
+                                 gpus_per_node=self.gpus_per_node)
+        res = plan_hybrid(topo, self.model, global_batch=self.global_batch,
+                          seq=self.seq, gpus_per_node=self.gpus_per_node,
+                          n_workers=self.n_workers, with_baseline=False,
+                          max_candidates=self.max_candidates,
+                          cache=self.cache)
+        stats = res.search_stats or SearchStats()
+        return self._finish(res.plan, res.predicted, "cold-plan", t0, stats,
+                            cold=True, topo=topo, ctx=ctx,
+                            refresh_portfolio=True)
+
+    # -- warm paths ------------------------------------------------------------
+
+    def replan(self, topo: ClusterTopology,
+               event: NetworkEvent | None = None) -> ReplanResult:
+        """Re-plan after ``event`` on the (already updated) topology.
+
+        Classifies the actual delta — device set changed vs parameters-only —
+        rather than trusting ``event.kind`` alone, and dispatches per the
+        decision table in the module docstring."""
+        if self.incumbent is None or self._device_key is None:
+            return self.plan(topo)
+        fp = self.cache.fingerprint(topo)
+        if fp.device_key != self._device_key:
+            return self._replan_device_set(topo)
+        if event is not None and event.kind == "slowdown":
+            return self._replan_straggler(topo)
+        ratio = 1.0
+        if event is not None and event.kind == "bandwidth":
+            prev = self._bw_factor.get(event.selector, 1.0)
+            ratio = event.factor / prev if prev > 0 else event.factor
+            self._bw_factor[event.selector] = event.factor
+        return self._replan_bandwidth(topo, ratio)
+
+    def _rescore_portfolio(self, topo: ClusterTopology, ctx: _CacheContext,
+                           ratio: float, stats: SearchStats
+                           ) -> tuple[float, ParallelPlan, StepSim] | None:
+        """Simulate the top-K cached plans (ranked by a bandwidth-adjusted
+        estimate of their previous score) on the new topology."""
+        inc_plan, _ = self.incumbent  # type: ignore[misc]
+        ranked = sorted(
+            (p for p in self._portfolio if p[2] is not None),
+            key=lambda p: _comm_scale_estimate(p[2], p[1], ratio))
+        chosen = ranked[:self.rescore_top_k]
+        min_sims = min(self.rescore_min_sims,
+                       max(1, len(ranked) // 3))
+        fresh: dict[tuple[StrategyPoint, bool], StepSim] = {}
+        best: tuple[float, ParallelPlan, StepSim] | None = None
+        for i, (key, plan, old) in enumerate(chosen):
+            # estimate-gated early stop: the ranking estimate consistently
+            # *over*shoots the true step time, so once the next candidate's
+            # estimate clears the best simulated time by the stop margin the
+            # remaining tail cannot plausibly win
+            if (best is not None and stats.explored >= min_sims
+                    and _comm_scale_estimate(old, plan, ratio)
+                    >= best[0] * self.rescore_stop_margin):
+                stats.pruned += len(chosen) - i
+                break
+            sim = self._simulate(plan, topo, ctx)
+            if sim is None:
+                stats.rejected += 1
+                continue
+            stats.explored += 1
+            fresh[key] = sim
+            if best is None or sim.step_time < best[0]:
+                best = (sim.step_time, plan, sim)
+        # the incumbent always gets re-scored, even if ranked out
+        inc_sim = self._simulate(inc_plan, topo, ctx)
+        if inc_sim is not None and (best is None
+                                    or inc_sim.step_time < best[0]):
+            best = (inc_sim.step_time, inc_plan, inc_sim)
+        # fold fresh scores back into the engine-private portfolio (the
+        # context's plan memo stays untouched: its materializations belong
+        # to full searches on *this* fingerprint, not recycled ones)
+        if fresh:
+            self._portfolio = [(k, p, fresh.get(k, s))
+                               for k, p, s in self._portfolio]
+        return best
+
+    def _replan_bandwidth(self, topo: ClusterTopology,
+                          ratio: float) -> ReplanResult:
+        """S1: same devices, different links — simulation only (no
+        enumeration, no layer B&B)."""
+        t0 = time.perf_counter()
+        stats = SearchStats()
+        ctx = self.cache.context(topo, self.model,
+                                 global_batch=self.global_batch, seq=self.seq,
+                                 gpus_per_node=self.gpus_per_node)
+        best = self._rescore_portfolio(topo, ctx, ratio, stats)
+        if best is None:                       # cache somehow useless: cold
+            return self.plan(topo)
+        stats.cache_hits, stats.cache_misses = ctx.counters()
+        stats.wall_time = time.perf_counter() - t0
+        return self._finish(best[1], best[2], "bandwidth-rescore", t0, stats,
+                            cold=False, topo=topo, ctx=ctx)
+
+    def _replan_straggler(self, topo: ClusterTopology) -> ReplanResult:
+        """S2: same devices, changed perf factor — local rebalance of the
+        incumbent (keep dp/tp/pp; re-split layers and batch shares) raced
+        against the top-K portfolio re-score."""
+        from .dynamic import reassign_for_straggler
+        t0 = time.perf_counter()
+        stats = SearchStats()
+        ctx = self.cache.context(topo, self.model,
+                                 global_batch=self.global_batch, seq=self.seq,
+                                 gpus_per_node=self.gpus_per_node)
+        inc_plan, _ = self.incumbent  # type: ignore[misc]
+        best = self._rescore_portfolio(topo, ctx, 1.0, stats)
+        try:
+            rebalanced = reassign_for_straggler(
+                inc_plan, self.model, topo, batch=self.global_batch,
+                seq=self.seq)
+            sim = self._simulate(rebalanced, topo, ctx)
+        except (ValueError, ZeroDivisionError):
+            sim = None
+        if sim is not None:
+            stats.explored += 1
+            if best is None or sim.step_time < best[0]:
+                best = (sim.step_time, rebalanced, sim)
+        if best is None:
+            return self.plan(topo)
+        stats.cache_hits, stats.cache_misses = ctx.counters()
+        stats.wall_time = time.perf_counter() - t0
+        return self._finish(best[1], best[2], "straggler-rebalance", t0,
+                            stats, cold=False, topo=topo, ctx=ctx)
+
+    def _neighborhood(self, n: int) -> list[StrategyPoint]:
+        """Strategy points within a factor-2 dp/tp/pp neighborhood of the
+        incumbent, valid for an ``n``-device cluster."""
+        inc_plan, _ = self.incumbent  # type: ignore[misc]
+        m = self.model
+        tps = {inc_plan.tp, inc_plan.tp * 2, max(1, inc_plan.tp // 2)}
+        pps = {inc_plan.pp, inc_plan.pp + 1, max(1, inc_plan.pp - 1),
+               inc_plan.pp * 2, max(1, inc_plan.pp // 2)}
+        syncs = {inc_plan.grad_sync, "rs_ag", "allreduce"}
+        pts: list[StrategyPoint] = []
+        for tp in sorted(tps):
+            if n % tp or m.n_heads % tp:
+                continue
+            for pp in sorted(pps):
+                if (n // tp) % pp or pp > m.n_layers:
+                    continue
+                dp = n // (tp * pp)
+                if self.global_batch % dp:
+                    continue
+                eps = [1]
+                if m.n_experts:
+                    eps = [e for e in _divisors(m.n_experts) if e <= tp]
+                    if inc_plan.ep in eps:
+                        eps = [inc_plan.ep]
+                for ep in eps:
+                    for mb in (pp, 2 * pp, 4 * pp):
+                        if (self.global_batch // dp) % mb:
+                            continue
+                        for sync in sorted(syncs):
+                            pts.append(StrategyPoint(dp, tp, pp, ep, mb,
+                                                     sync))
+        return pts
+
+    def _replan_device_set(self, topo: ClusterTopology) -> ReplanResult:
+        """S3: the alive set changed — cached plans reference a dead layout.
+        Seed from the incumbent's strategy neighborhood; only when that is
+        infeasible, run the full search with the best known score as the
+        pruning bound."""
+        t0 = time.perf_counter()
+        ctx = self.cache.context(topo, self.model,
+                                 global_batch=self.global_batch, seq=self.seq,
+                                 gpus_per_node=self.gpus_per_node)
+        n = len(topo.alive_ids())
+        neigh = self._neighborhood(n)
+        if neigh:
+            try:
+                res = plan_hybrid(
+                    topo, self.model, global_batch=self.global_batch,
+                    seq=self.seq, gpus_per_node=self.gpus_per_node,
+                    n_workers=self.n_workers, with_baseline=False,
+                    max_candidates=self.max_candidates, cache=self.cache,
+                    points=neigh, allow_subset=False)
+                stats = res.search_stats or SearchStats()
+                return self._finish(res.plan, res.predicted, "neighborhood",
+                                    t0, stats, cold=False, topo=topo,
+                                    ctx=ctx, refresh_portfolio=True)
+            except RuntimeError:
+                pass
+        # fall back to the full search; a surviving incumbent score bounds
+        # the candidates (point_lower_bound cut inside plan_hybrid).  The
+        # incumbent only participates if every device it names is still
+        # alive — the simulator silently drops dead members from TP groups,
+        # so scoring a stale plan would look optimistic while the plan is
+        # actually unrunnable.
+        alive = set(topo.alive_ids())
+        inc_sim = None
+        if self.incumbent is not None:
+            inc_plan = self.incumbent[0]
+            inc_alive = {d for st in inc_plan.stages for d in st.device_ids}
+            if inc_plan.world <= len(alive) and inc_alive <= alive:
+                inc_sim = self._simulate(inc_plan, topo, ctx)
+        bound = inc_sim.step_time if inc_sim is not None else None
+        res = plan_hybrid(topo, self.model, global_batch=self.global_batch,
+                          seq=self.seq, gpus_per_node=self.gpus_per_node,
+                          n_workers=self.n_workers, with_baseline=False,
+                          max_candidates=self.max_candidates,
+                          cache=self.cache, incumbent_bound=bound)
+        stats = res.search_stats or SearchStats()
+        best_plan, best_sim = res.plan, res.predicted
+        if inc_sim is not None and inc_sim.step_time < best_sim.step_time:
+            best_plan, best_sim = self.incumbent[0], inc_sim
+        return self._finish(best_plan, best_sim, "full-replan", t0, stats,
+                            cold=False, topo=topo, ctx=ctx,
+                            refresh_portfolio=True)
+
+    # -- telemetry -------------------------------------------------------------
+
+    def describe(self) -> str:
+        cs = self.cache.stats
+        lines = [f"ReplanEngine: {len(self.history)} plans "
+                 f"({sum(1 for r in self.history if not r.cold)} warm), "
+                 f"cache {cs.hits} hits / {cs.misses} misses "
+                 f"({cs.hit_rate:.0%}), {cs.evictions} evictions"]
+        for r in self.history[-8:]:
+            lines.append(
+                f"  {r.path:20s} {r.wall_time * 1e3:8.1f} ms  "
+                f"step {r.predicted.step_time * 1e3:8.2f} ms  "
+                f"explored {r.stats.explored:4d} pruned {r.stats.pruned:4d} "
+                f"rejected {r.stats.rejected:3d}")
+        return "\n".join(lines)

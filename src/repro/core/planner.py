@@ -25,6 +25,7 @@ multi-threaded simulation.
 
 from __future__ import annotations
 
+import functools
 import heapq
 import itertools
 import math
@@ -51,6 +52,13 @@ class SearchStats:
     explored: int = 0
     pruned: int = 0
     infeasible: int = 0
+    # candidates whose materialization/simulation raised (ValueError /
+    # ZeroDivisionError) — previously swallowed silently; surfaced so the
+    # paper-style search statistics show pruning efficacy.
+    rejected: int = 0
+    # strategy-cache telemetry (filled when plan_hybrid runs with a cache)
+    cache_hits: int = 0
+    cache_misses: int = 0
     wall_time: float = 0.0
 
 
@@ -405,10 +413,12 @@ class PlanResult:
     candidates_evaluated: int
     candidates_pruned: int
     wall_time: float
+    candidates_rejected: int = 0
     baseline: ParallelPlan | None = None
     baseline_predicted: StepSim | None = None
     tuned_baseline: ParallelPlan | None = None
     tuned_baseline_predicted: StepSim | None = None
+    search_stats: SearchStats | None = None
 
     @property
     def speedup_vs_baseline(self) -> float:
@@ -469,6 +479,43 @@ def megatron_tuned_plan(topo: ClusterTopology, model: ModelDesc, *,
     return best[1], best[2]
 
 
+@functools.lru_cache(maxsize=128)
+def _total_step_flops(model: ModelDesc, global_batch: int, seq: int) -> float:
+    return 3.0 * sum(layer_flops(model, l, global_batch, seq)
+                     for l in range(model.n_layers))
+
+
+def point_lower_bound(point: StrategyPoint, topo: ClusterTopology,
+                      model: ModelDesc, *, global_batch: int,
+                      seq: int) -> float:
+    """Optimistic step-time bound for a strategy point — no materialization,
+    no simulation.  Used by the re-planning engine to cut candidates against
+    an incumbent plan's score (Alg. 1 pruning reused across plans).
+
+    compute-over-aggregate-throughput plus a gradient-sync floor.  Both
+    terms undershoot the simulator by construction — the sync term charges
+    one *average* stage's bytes at the cluster's best single-edge bandwidth,
+    while the simulator pays the worst stage at the group's bottleneck — so
+    a cut candidate can never have beaten the incumbent.  Keep it that way:
+    tightening either term toward the simulator breaks the never-over-prune
+    invariant the re-planning engine relies on.
+    """
+    rate = sum(d.spec.peak_flops * d.spec.matmul_eff * d.perf_factor
+               for d in topo.alive_devices)
+    if rate <= 0:
+        return math.inf
+    lb = _total_step_flops(model, global_batch, seq) / rate
+    if point.dp > 1:
+        stage_bytes = (model.total_params() * model.dtype_bytes
+                       / (point.pp * point.tp))
+        best_bw = max((e.effective_bandwidth
+                       for link in topo.links.values() for e in link.edges),
+                      default=0.0)
+        if best_bw > 0:
+            lb += (point.dp - 1) / point.dp * stage_bytes / best_bw
+    return lb
+
+
 def materialize_plan(point: StrategyPoint, topo: ClusterTopology,
                      model: ModelDesc, *, global_batch: int, seq: int,
                      refine_layers: bool = True) -> ParallelPlan:
@@ -495,11 +542,20 @@ def materialize_plan(point: StrategyPoint, topo: ClusterTopology,
         meta={"source": "auto-planner"})
 
 
+# Default search-space knobs.  Test fixtures (tests/conftest.py) shrink these
+# so the tier-1 suite stays within its CI budget; explicit arguments win.
+DEFAULT_MAX_CANDIDATES = 512
+DEFAULT_N_WORKERS = 8
+
+
 def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
                 global_batch: int, seq: int, gpus_per_node: int = 8,
-                n_workers: int = 8, with_baseline: bool = True,
-                max_candidates: int = 512,
-                allow_subset: bool = True) -> PlanResult:
+                n_workers: int | None = None, with_baseline: bool = True,
+                max_candidates: int | None = None,
+                allow_subset: bool = True,
+                cache=None,
+                incumbent_bound: float | None = None,
+                points: Sequence[StrategyPoint] | None = None) -> PlanResult:
     """Full planning pipeline (paper §3): enumerate + prune strategies,
     materialize each (layer B&B + batch shares), score with the simulator in
     parallel threads, return the argmin with search statistics.
@@ -507,57 +563,123 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
     ``allow_subset``: when no feasible (dp, tp, pp) factorization exists for
     the exact alive-device count (e.g. 7 survivors after a failure), retire
     the slowest devices until one does — the Oobleck-style degrade path.
+
+    ``cache``: a :class:`repro.core.engine.StrategyCache` (duck-typed — any
+    object with a ``context(topo, model, global_batch, seq)`` method).  When
+    given, enumeration output, materialized plans and simulator scores are
+    memoized per topology fingerprint, so re-planning after a dynamic event
+    only pays for what actually changed.
+
+    ``incumbent_bound``: a known-achievable step time (the incumbent plan's
+    score); candidates whose optimistic :func:`point_lower_bound` already
+    exceeds it are cut before materialization/simulation.
+
+    ``points``: pre-seeded candidate list (the re-planning engine passes the
+    incumbent's neighborhood); skips enumeration entirely.
     """
     t0 = time.perf_counter()
-    points, enum_stats = enumerate_strategies(
-        topo, model, global_batch=global_batch, gpus_per_node=gpus_per_node)
-    if not points and allow_subset:
-        ids = sorted(topo.alive_ids(),
-                     key=lambda i: -topo.device(i).spec.peak_flops
-                     * topo.device(i).perf_factor)
-        for n_use in range(len(ids) - 1, 0, -1):
-            sub = topo.snapshot(0.0)
-            for d in ids[n_use:]:
-                sub.devices[d].alive = False
+    if n_workers is None:
+        n_workers = DEFAULT_N_WORKERS
+    if max_candidates is None:
+        max_candidates = DEFAULT_MAX_CANDIDATES
+    ctx = cache.context(topo, model, global_batch=global_batch, seq=seq,
+                        gpus_per_node=gpus_per_node) \
+        if cache is not None else None
+    enum_stats = SearchStats()
+    if points is None:
+        cached_pts = ctx.get_points() if ctx is not None else None
+        if cached_pts is not None:
+            points = cached_pts
+            enum_stats.explored = len(points)
+        else:
             points, enum_stats = enumerate_strategies(
-                sub, model, global_batch=global_batch,
+                topo, model, global_batch=global_batch,
                 gpus_per_node=gpus_per_node)
-            if points:
-                topo = sub
-                break
-    points = points[:max_candidates]
+            if not points and allow_subset:
+                ids = sorted(topo.alive_ids(),
+                             key=lambda i: -topo.device(i).spec.peak_flops
+                             * topo.device(i).perf_factor)
+                for n_use in range(len(ids) - 1, 0, -1):
+                    sub = topo.snapshot(0.0)
+                    for d in ids[n_use:]:
+                        sub.devices[d].alive = False
+                    points, enum_stats = enumerate_strategies(
+                        sub, model, global_batch=global_batch,
+                        gpus_per_node=gpus_per_node)
+                    if points:
+                        topo = sub
+                        # the degraded topology is a different fingerprint
+                        ctx = cache.context(topo, model,
+                                            global_batch=global_batch,
+                                            seq=seq,
+                                            gpus_per_node=gpus_per_node) \
+                            if cache is not None else None
+                        break
+            if ctx is not None:
+                ctx.put_points(points)
+    else:
+        points = list(points)
+        enum_stats.explored = len(points)
+    points = list(points)[:max_candidates]
 
-    def score(point: StrategyPoint) -> tuple[float, ParallelPlan, StepSim] | None:
+    stats = SearchStats(explored=enum_stats.explored,
+                        pruned=enum_stats.pruned,
+                        infeasible=enum_stats.infeasible)
+
+    def score(point: StrategyPoint
+              ) -> tuple[tuple[float, ParallelPlan, StepSim] | None, int, int]:
         """Evaluate both materializations: heterogeneity-refined (uneven
         layers/shares) AND plain uniform — on near-identical devices the
         forced uneven split can lose to uniform, so the search space must
-        include both (operator splitting is a *choice*, §2.3)."""
+        include both (operator splitting is a *choice*, §2.3).
+
+        Returns (best, n_rejected, n_bound_pruned)."""
+        if incumbent_bound is not None and point_lower_bound(
+                point, topo, model, global_batch=global_batch,
+                seq=seq) >= incumbent_bound:
+            return None, 0, 1
         best = None
+        rejected = 0
         for refine in ((True, False) if topo.is_heterogeneous() else
                        (False,)):
-            try:
-                plan = materialize_plan(point, topo, model,
-                                        global_batch=global_batch, seq=seq,
-                                        refine_layers=refine)
-                if not refine:
-                    plan = ParallelPlan(
-                        dp=plan.dp, tp=plan.tp, pp=plan.pp, ep=plan.ep,
-                        microbatches=plan.microbatches, stages=plan.stages,
-                        batch_shares=tuple([1.0 / plan.dp] * plan.dp),
-                        grad_sync=plan.grad_sync, zero1=plan.zero1,
-                        meta=plan.meta)
-                sim = simulate_training_step(plan, model, topo,
-                                             global_batch=global_batch,
-                                             seq=seq)
-                if best is None or sim.step_time < best[0]:
-                    best = (sim.step_time, plan, sim)
-            except (ValueError, ZeroDivisionError):
-                continue
-        return best
+            plan = ctx.get_plan(point, refine) if ctx is not None else None
+            if plan is None:
+                try:
+                    plan = materialize_plan(point, topo, model,
+                                            global_batch=global_batch,
+                                            seq=seq, refine_layers=refine)
+                    if not refine:
+                        plan = ParallelPlan(
+                            dp=plan.dp, tp=plan.tp, pp=plan.pp, ep=plan.ep,
+                            microbatches=plan.microbatches, stages=plan.stages,
+                            batch_shares=tuple([1.0 / plan.dp] * plan.dp),
+                            grad_sync=plan.grad_sync, zero1=plan.zero1,
+                            meta=plan.meta)
+                except (ValueError, ZeroDivisionError):
+                    rejected += 1
+                    continue
+                if ctx is not None:
+                    ctx.put_plan(point, refine, plan)
+            sim = ctx.get_score(plan) if ctx is not None else None
+            if sim is None:
+                try:
+                    sim = simulate_training_step(plan, model, topo,
+                                                 global_batch=global_batch,
+                                                 seq=seq)
+                except (ValueError, ZeroDivisionError):
+                    rejected += 1
+                    continue
+                if ctx is not None:
+                    ctx.put_score(plan, sim)
+            if best is None or sim.step_time < best[0]:
+                best = (sim.step_time, plan, sim)
+        return best, rejected, 0
 
     results: list[tuple[float, ParallelPlan, StepSim]] = []
     with ThreadPoolExecutor(max_workers=n_workers) as pool:
-        for r in pool.map(score, points):
+        for r, rej, cut in pool.map(score, points):
+            stats.rejected += rej
+            stats.pruned += cut
             if r is not None:
                 results.append(r)
     if not results:
@@ -574,10 +696,15 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
         tuned, tuned_sim = megatron_tuned_plan(
             topo, model, global_batch=global_batch, seq=seq)
 
+    if ctx is not None:
+        stats.cache_hits, stats.cache_misses = ctx.counters()
+    stats.wall_time = time.perf_counter() - t0
     return PlanResult(
         plan=best_plan, predicted=best_sim,
         candidates_evaluated=len(results),
-        candidates_pruned=enum_stats.pruned + enum_stats.infeasible,
-        wall_time=time.perf_counter() - t0,
+        candidates_pruned=stats.pruned + stats.infeasible,
+        candidates_rejected=stats.rejected,
+        wall_time=stats.wall_time,
         baseline=baseline, baseline_predicted=baseline_sim,
-        tuned_baseline=tuned, tuned_baseline_predicted=tuned_sim)
+        tuned_baseline=tuned, tuned_baseline_predicted=tuned_sim,
+        search_stats=stats)

@@ -1,0 +1,25 @@
+"""JAX version compatibility shims for the parallel layer.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to a top-level
+``jax.shard_map`` export, and its replication-check kwarg was renamed
+``check_rep`` -> ``check_vma`` along the way.  This wrapper accepts the new
+spelling and translates for older JAX so the rest of the codebase can use
+one API.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+try:
+    from jax import shard_map as _shard_map      # jax >= 0.5
+except ImportError:                              # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = set(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, **kwargs):
+    if "check_vma" in kwargs and "check_vma" not in _PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(f, **kwargs)

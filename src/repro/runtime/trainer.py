@@ -28,7 +28,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import (ClusterTopology, DynamicOrchestrator, ModelDesc,
-                        NetworkEvent, ParallelPlan, PlanTemplates)
+                        NetworkEvent, ParallelPlan, ReplanEngine,
+                        StrategyCache)
 from repro.checkpoint.store import AsyncSaver, latest_step, restore
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models.config import ArchConfig
@@ -72,13 +73,25 @@ class Trainer:
         self.history: list[dict] = []
         self.replans = 0
         self._orch = None
+        self._engine = None
         if topo is not None:
             desc = cfg.arch.to_model_desc()
+            # the incremental re-planning engine handles every event kind
+            # (device-set changes included), so the Oobleck-style
+            # PlanTemplates precompute is no longer paid here — it remains
+            # available for engine-less DynamicOrchestrator users
+            self._engine = ReplanEngine(
+                desc, global_batch=cfg.global_batch, seq=cfg.seq_len,
+                cache=StrategyCache())
+            try:
+                # cold plan up front: warms the strategy cache + candidate
+                # portfolio so every later event takes a warm path
+                self._engine.plan(topo)
+            except RuntimeError:
+                pass
             self._orch = DynamicOrchestrator(
                 model=desc, global_batch=cfg.global_batch, seq=cfg.seq_len,
-                templates=PlanTemplates.precompute(
-                    topo, desc, global_batch=cfg.global_batch,
-                    seq=cfg.seq_len, failure_budget=2))
+                engine=self._engine)
         self._build(mesh)
 
     # -- (re)build against the current mesh/plan -----------------------------

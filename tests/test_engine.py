@@ -1,0 +1,200 @@
+"""Incremental re-planning engine: fingerprints, strategy cache, and
+warm-vs-cold plan equivalence (ISSUE 1 tentpole)."""
+
+import math
+
+import pytest
+
+from repro.core import (ModelDesc, NetworkEvent, ReplanEngine, StrategyCache,
+                        fingerprint_topology, hetero_cluster, plan_hybrid)
+from repro.core import planner as planner_mod
+
+DESC = ModelDesc(name="m", n_layers=12, d_model=1024, n_heads=16,
+                 n_kv_heads=16, d_ff=4096, vocab=32000)
+
+
+def v100_fabric(n=8, factor=1.0):
+    """fig6c-style V100-32G-PCIe cluster whose whole fabric scales (S1)."""
+    return hetero_cluster({"V100": n}, intra_bw_map={"V100": 25e9 * factor},
+                          inter_bw=12.5e9 * factor, gpus_per_node=4)
+
+
+# ---------------------------------------------------------------------------
+# TopologyFingerprint
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_stable_for_identical_topologies():
+    a, b = v100_fabric(), v100_fabric()
+    assert fingerprint_topology(a).key == fingerprint_topology(b).key
+
+
+def test_fingerprint_ignores_sub_bucket_bandwidth_wobble():
+    # ~1% wobble stays inside one log2/0.25 bucket
+    a, b = v100_fabric(factor=1.0), v100_fabric(factor=1.01)
+    assert fingerprint_topology(a).key == fingerprint_topology(b).key
+
+
+def test_fingerprint_changes_when_bandwidth_bucket_changes():
+    a, b = v100_fabric(factor=1.0), v100_fabric(factor=0.2)
+    fa, fb = fingerprint_topology(a), fingerprint_topology(b)
+    assert fa.key != fb.key
+    # a links-only change keeps the device identity
+    assert fa.device_key == fb.device_key
+
+
+def test_fingerprint_changes_on_perf_factor_and_death():
+    base = v100_fabric()
+    slowed = v100_fabric()
+    slowed.apply_event(NetworkEvent(0.0, "slowdown", device_id=0, factor=0.5))
+    assert fingerprint_topology(base).key != fingerprint_topology(slowed).key
+    # perf change is not a device-set change
+    assert fingerprint_topology(base).device_key \
+        == fingerprint_topology(slowed).device_key
+    dead = v100_fabric()
+    dead.apply_event(NetworkEvent(0.0, "fail", device_id=7))
+    assert fingerprint_topology(base).device_key \
+        != fingerprint_topology(dead).device_key
+
+
+# ---------------------------------------------------------------------------
+# StrategyCache
+# ---------------------------------------------------------------------------
+
+
+def test_repeated_plan_hits_cache():
+    topo = v100_fabric()
+    engine = ReplanEngine(DESC, global_batch=32, seq=512,
+                          cache=StrategyCache())
+    r1 = engine.plan(topo)
+    assert r1.stats.cache_misses > 0
+    hits_before = engine.cache.stats.hits
+    r2 = engine.plan(topo)          # identical topology: everything memoized
+    assert engine.cache.stats.hits > hits_before
+    assert r2.stats.cache_misses == 0
+    assert r2.predicted.step_time == pytest.approx(r1.predicted.step_time)
+    assert r2.wall_time < r1.wall_time
+
+
+def test_repeated_replan_hits_cache():
+    topo = v100_fabric()
+    engine = ReplanEngine(DESC, global_batch=32, seq=512,
+                          cache=StrategyCache())
+    engine.plan(topo)
+    ev = NetworkEvent(1.0, "bandwidth", factor=0.2)
+    low = v100_fabric(factor=0.2)
+    r1 = engine.replan(low, ev)
+    assert r1.path == "bandwidth-rescore"
+    # the same event again: scores for the low-bw fingerprint are all cached
+    r2 = engine.replan(low, ev)
+    assert r2.path == "bandwidth-rescore"
+    assert r2.stats.cache_hits > 0
+    assert r2.predicted.step_time == pytest.approx(r1.predicted.step_time)
+
+
+def test_cache_lru_eviction_bound():
+    cache = StrategyCache(max_entries=2)
+    for f in (1.0, 2.0, 4.0, 8.0):
+        cache.context(v100_fabric(factor=f), DESC, global_batch=32, seq=512)
+    assert len(cache) == 2
+    assert cache.stats.evictions == 2
+
+
+# ---------------------------------------------------------------------------
+# Warm replan vs cold plan equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_warm_bandwidth_replan_matches_cold_plan_quality():
+    """The acceptance gate's equivalence half: warm re-plan lands within 5%
+    of a from-scratch plan_hybrid on the same post-event topology."""
+    engine = ReplanEngine(DESC, global_batch=32, seq=512,
+                          cache=StrategyCache())
+    engine.plan(v100_fabric())
+    for factor in (0.2, 4.0):
+        post = v100_fabric(factor=factor)
+        warm = engine.replan(post, NetworkEvent(1.0, "bandwidth",
+                                                factor=factor))
+        cold = plan_hybrid(post, DESC, global_batch=32, seq=512,
+                           with_baseline=False)
+        assert warm.path == "bandwidth-rescore"
+        assert warm.predicted.step_time \
+            <= cold.predicted.step_time * 1.05, factor
+        # bandwidth path never re-enumerates: far fewer sims than cold
+        assert warm.stats.explored < cold.candidates_evaluated
+
+
+def test_fail_replan_returns_feasible_plan_on_survivors():
+    topo = hetero_cluster({"RTX4090D": 4, "V100": 4}, gpus_per_node=4)
+    engine = ReplanEngine(DESC, global_batch=32, seq=512,
+                          cache=StrategyCache())
+    engine.plan(topo)
+    topo.apply_event(NetworkEvent(1.0, "fail", device_id=7))
+    res = engine.replan(topo, NetworkEvent(1.0, "fail", device_id=7))
+    assert res.path in ("neighborhood", "full-replan")
+    alive = set(topo.alive_ids())
+    used = {d for st in res.plan.stages for d in st.device_ids}
+    assert used <= alive
+    assert math.isfinite(res.predicted.step_time)
+
+
+def test_fail_replan_never_returns_plan_naming_dead_device():
+    """Regression: the simulator silently drops dead members from TP groups,
+    so a stale incumbent can look optimistic on the post-failure topology —
+    the engine must not hand it back."""
+    from repro.core import materialize_plan, StrategyPoint
+    topo = v100_fabric(8)
+    engine = ReplanEngine(DESC, global_batch=32, seq=512,
+                          cache=StrategyCache())
+    engine.plan(topo)
+    # force an incumbent whose TP group spans device 7
+    inc = materialize_plan(StrategyPoint(2, 2, 2, 1, 2, "rs_ag"), topo, DESC,
+                           global_batch=32, seq=512)
+    from repro.core import simulate_training_step
+    engine.incumbent = (inc, simulate_training_step(
+        inc, DESC, topo, global_batch=32, seq=512))
+    topo.apply_event(NetworkEvent(1.0, "fail", device_id=7))
+    res = engine.replan(topo, NetworkEvent(1.0, "fail", device_id=7))
+    alive = set(topo.alive_ids())
+    used = {d for st in res.plan.stages for d in st.device_ids}
+    assert used <= alive, (used, alive)
+
+
+def test_straggler_replan_rebalances_and_does_not_regress():
+    topo = hetero_cluster({"RTX4090D": 4, "V100": 4}, gpus_per_node=4)
+    engine = ReplanEngine(DESC, global_batch=32, seq=512,
+                          cache=StrategyCache())
+    r0 = engine.plan(topo)
+    topo.apply_event(NetworkEvent(1.0, "slowdown", device_id=0, factor=0.25))
+    res = engine.replan(topo, NetworkEvent(1.0, "slowdown", device_id=0,
+                                           factor=0.25))
+    assert res.path == "straggler-rebalance"
+    # incumbent re-scored on the new topology is always a candidate, so the
+    # chosen plan can only be at least as good
+    from repro.core import simulate_training_step
+    inc = simulate_training_step(r0.plan, DESC, topo, global_batch=32,
+                                 seq=512)
+    assert res.predicted.step_time <= inc.step_time * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Search statistics: silent rejections are now counted (ISSUE 1 small fix)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_hybrid_counts_scoring_rejections(monkeypatch):
+    topo = v100_fabric()
+    real = planner_mod.simulate_training_step
+
+    def flaky(plan, model, topo_, **kw):
+        if plan.grad_sync == "allreduce":
+            raise ValueError("injected rejection")
+        return real(plan, model, topo_, **kw)
+
+    monkeypatch.setattr(planner_mod, "simulate_training_step", flaky)
+    res = plan_hybrid(topo, DESC, global_batch=32, seq=512,
+                      with_baseline=False)
+    assert res.candidates_rejected > 0
+    assert res.search_stats is not None
+    assert res.search_stats.rejected == res.candidates_rejected
+    assert res.plan.grad_sync == "rs_ag"

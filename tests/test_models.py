@@ -30,7 +30,17 @@ def _mods(cfg, B, key):
     return mods
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# one representative arch stays in the tier-1 gate; the full sweep (a jit
+# compile per arch, ~1 min total) runs in the slow suite
+_FAST_ARCHS = ("qwen2_7b",)
+
+
+def _arch_params(archs, fast=_FAST_ARCHS):
+    return [a if a in fast else pytest.param(a, marks=pytest.mark.slow)
+            for a in archs]
+
+
+@pytest.mark.parametrize("arch", _arch_params(ARCH_IDS))
 def test_arch_smoke_forward_and_train_step(arch):
     cfg = get_config(arch).reduced()
     model = LM(cfg)
@@ -59,9 +69,11 @@ def test_arch_smoke_forward_and_train_step(arch):
     assert not np.allclose(np.asarray(before), np.asarray(after))
 
 
-@pytest.mark.parametrize("arch", ["gemma_7b", "qwen3_moe_30b_a3b",
-                                  "zamba2_2p7b", "xlstm_125m",
-                                  "whisper_medium"])
+@pytest.mark.parametrize("arch", _arch_params(["gemma_7b",
+                                               "qwen3_moe_30b_a3b",
+                                               "zamba2_2p7b", "xlstm_125m",
+                                               "whisper_medium"],
+                                              fast=("gemma_7b",)))
 def test_prefill_matches_forward_last_position(arch):
     """prefill's last-token logits == logits computed from full forward."""
     cfg = get_config(arch).reduced()
@@ -79,7 +91,8 @@ def test_prefill_matches_forward_last_position(arch):
                                atol=1e-4, rtol=1e-4)
 
 
-@pytest.mark.parametrize("arch", ["qwen2_7b", "zamba2_2p7b", "xlstm_125m"])
+@pytest.mark.parametrize("arch", _arch_params(["qwen2_7b", "zamba2_2p7b",
+                                               "xlstm_125m"]))
 def test_decode_consistent_with_forward(arch):
     """Teacher-forced decode over a fresh cache reproduces forward logits."""
     cfg = get_config(arch).reduced()
@@ -113,7 +126,7 @@ def test_unroll_matches_scan():
     params = m_scan.init(key)
     np.testing.assert_allclose(
         np.asarray(m_scan.forward(params, tokens)),
-        np.asarray(m_unroll.forward(params, tokens)), atol=1e-5)
+        np.asarray(m_unroll.forward(params, tokens)), atol=5e-5)
 
 
 def test_tiny_dense_model_learns():

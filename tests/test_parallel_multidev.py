@@ -15,6 +15,10 @@ from pathlib import Path
 
 import pytest
 
+# every case spawns a fresh interpreter and recompiles under an 8-device
+# host mesh — minutes of wall time, excluded from the tier-1 CI gate
+pytestmark = pytest.mark.slow
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 
@@ -146,7 +150,10 @@ def test_small_mesh_dryrun_lowers_and_compiles():
                                 donate=True)
         compiled = lowered.compile()
         ma = compiled.memory_analysis()
-        assert compiled.cost_analysis()["flops"] > 0
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):   # jax<=0.4.x returns [dict]
+            ca = ca[0]
+        assert ca["flops"] > 0
         txt = compiled.as_text()
         assert any(k in txt for k in ("all-reduce", "all-gather",
                                       "reduce-scatter"))

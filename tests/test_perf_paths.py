@@ -16,6 +16,10 @@ from repro.configs import get_config
 from repro.models import layers as L
 from repro.models.lm import LM
 
+# reference-vs-optimized numerical equivalence sweeps (several jit compiles
+# each) — covered by the slow suite, not the tier-1 CI gate
+pytestmark = pytest.mark.slow
+
 
 def test_moe_grouped_dispatch_matches_single_group():
     """With ample capacity (no drops) group-local dispatch == global."""

@@ -4,6 +4,9 @@ import math
 
 import pytest
 
+# randomized search over graph/cluster instances — long-running, slow suite
+pytestmark = pytest.mark.slow
+
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 

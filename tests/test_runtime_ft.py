@@ -48,7 +48,10 @@ def test_failure_event_triggers_template_failover_and_resume(tmp_path):
     state, hist = tr.run()
     assert tr.replans == 1
     rec = tr._orch.history[-1]
-    assert rec.action in ("template-failover", "full-replan")
+    # engine-driven trainer: device-set change takes a neighborhood / full /
+    # cold path; engine-less orchestrators keep the template lookup
+    assert rec.action in ("template-failover", "full-replan",
+                          "neighborhood", "cold-plan")
     losses = {h["step"]: h["loss"] for h in hist}
     # resumed loss (step 7, restored from the step-7 snapshot) close to the
     # trajectory before the event
