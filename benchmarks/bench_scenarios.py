@@ -1,0 +1,152 @@
+"""Multi-scenario adaptability sweep over the cloud-scenario catalog.
+
+Replays every catalog family end-to-end through the simulator +
+``DynamicOrchestrator``/``ReplanEngine`` (repro.scenarios harness) and
+reports, per family:
+
+  * adapted-vs-static step-time ratio   (< 1: adaptation pays; a static
+    plan that dies with a failed device contributes zero throughput),
+  * adapted-vs-oracle step-time ratio   (>= 1: distance to a clairvoyant
+    full re-plan with zero re-plan cost),
+  * re-plan counts / path histogram / measured re-plan latency.
+
+The sweep then runs twice — sequentially and process-parallel (the paper's
+parallel-simulation strategy applied across scenarios) — and gates on the
+parallel speedup.  The gate is hardware-calibrated: a pure-CPU busy-loop
+probe measures what process-level scaling this host can physically deliver.
+When the calibrated ceiling shows real multicore headroom (>= 2.5x — any
+unshared >= 3-core machine, including the CI runners) the sweep must reach
+>= 2x.  On shared-hyperthread / throttled 2-vCPU containers the ceiling
+itself is noise-dominated (observed 0.9x-1.7x across identical runs), so
+the speedup is reported but not asserted.
+
+PYTHONPATH=src python -m benchmarks.bench_scenarios [--quick] [--json PATH]
+"""
+
+from __future__ import annotations
+
+import math
+import multiprocessing
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+
+from repro.scenarios import ScenarioHarness, list_scenarios
+from benchmarks.common import PAPER_MODELS, emit, write_json
+
+
+def _burn(n: int) -> int:
+    s = 0
+    for i in range(n):
+        s += i * i
+    return s
+
+
+def _calibrate(workers: int, n: int = 8_000_000) -> float:
+    """Measured process-scaling ceiling: ``workers`` identical CPU-bound
+    tasks, sequential vs one-per-process."""
+    t0 = time.perf_counter()
+    for _ in range(workers):
+        _burn(n)
+    seq = time.perf_counter() - t0
+    # spawn for the same reason the harness uses it: the parent just ran
+    # planner thread pools, and forking a threaded process risks deadlock
+    ctx = multiprocessing.get_context("spawn")
+    with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as ex:
+        list(ex.map(_burn, [1] * workers))      # absorb worker start-up
+        t0 = time.perf_counter()
+        list(ex.map(_burn, [n] * workers))
+        par = time.perf_counter() - t0
+    return seq / max(par, 1e-9)
+
+# longest families first: ex.map dispatches in order, so fronting the
+# expensive fail/join family keeps the parallel schedule balanced
+_ORDER = ("cloud_spot", "diurnal_wan", "straggler_churn",
+          "congested_multitenant", "cross_region", "fig6c_dynamic_bw")
+
+
+def _sweep_items(quick: bool) -> list[tuple[str, int]]:
+    # two seeds per family keeps every task well under half the sweep, so
+    # the longest-task bound cannot cap the parallel speedup below 2x
+    del quick  # quick mode shrinks the per-plan search space instead
+    names = [n for n in _ORDER if n in list_scenarios()]
+    names += [n for n in list_scenarios() if n not in names]
+    return [(n, s) for s in (0, 1) for n in names]
+
+
+def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
+    harness = ScenarioHarness(
+        PAPER_MODELS["LLaMA_7B"], global_batch=64, seq=2048,
+        max_candidates=48 if quick else 96, n_workers=2)
+    items = _sweep_items(quick)
+
+    t0 = time.perf_counter()
+    seq_reports = harness.run_many(items, parallel=False)
+    t_seq = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    par_reports = harness.run_many(items, parallel=True)
+    t_par = time.perf_counter() - t0
+    speedup = t_seq / max(t_par, 1e-9)
+
+    # calibrate + persist the telemetry BEFORE any gate can fire: a failed
+    # assertion must not discard the rows that diagnose it
+    workers = min(os.cpu_count() or 1, len(items))
+    ceiling = _calibrate(workers) if workers > 1 else 1.0
+    rows = [r.to_row() for r in seq_reports]
+    for row in rows:
+        row["parallel_speedup"] = round(speedup, 2)
+        row["parallel_ceiling"] = round(ceiling, 2)
+    emit(rows, f"bench_scenarios (catalog replay through ReplanEngine; "
+               f"parallel sweep {speedup:.2f}x over sequential, calibrated "
+               f"ceiling {ceiling:.2f}x on {os.cpu_count()} cores)")
+    if json_path:
+        write_json(rows, json_path)
+
+    # -- gates ---------------------------------------------------------------
+    families = {r.scenario for r in seq_reports}
+    assert len(families) >= 4, f"only {sorted(families)} replayed"
+    # every replay actually went through the engine (path histogram is the
+    # orchestrator's record of ReplanEngine decisions)
+    assert all(r.actions for r in seq_reports if r.n_events), rows
+    for r in seq_reports:
+        ovs, ovo = r.adapted_over_static, r.adapted_over_oracle
+        # adaptation never costs more than ~6% vs standing still...
+        assert not math.isfinite(ovs) or ovs <= 1.06, r.to_row()
+        # ...and tracks the clairvoyant oracle (threshold-keep allows the
+        # documented 10% drift, plus local-rebalance vs full-search gap)
+        assert not math.isfinite(ovo) or 0.95 <= ovo <= 1.30, r.to_row()
+    # at least one family must show a real adaptation win
+    wins = [r.adapted_over_static for r in seq_reports
+            if math.isfinite(r.adapted_over_static)]
+    assert min(wins) <= 0.90, rows
+    # deterministic across processes: the simulated step-time timelines of a
+    # parallel replay match the sequential one exactly (avg_step also charges
+    # *measured* re-plan latency, which legitimately varies with load)
+    for a, b in zip(seq_reports, par_reports):
+        assert a.scenario == b.scenario
+        assert a.adapted.timeline == b.adapted.timeline, (a.to_row(),
+                                                          b.to_row())
+        assert a.replans == b.replans
+    # parallel execution gate: asserted only where the calibrated ceiling
+    # shows real multicore headroom; on 2-vCPU/hyperthread-shared containers
+    # every wall-clock measurement (probe included) is noise-dominated
+    if ceiling >= 2.5:
+        assert speedup >= 2.0, (
+            f"parallel sweep speedup {speedup:.2f}x < 2x "
+            f"(seq {t_seq:.1f}s, par {t_par:.1f}s, {workers} workers, "
+            f"calibrated ceiling {ceiling:.2f}x)")
+    else:
+        print(f"[bench] parallel gate skipped: calibrated ceiling "
+              f"{ceiling:.2f}x < 2.5x on this host "
+              f"(measured sweep speedup {speedup:.2f}x)")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, help="write rows as JSON")
+    args = ap.parse_args()
+    run(quick=args.quick, json_path=args.json)

@@ -18,9 +18,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_planner_search, bench_replan,
-                            fig2_roofline, fig3_allreduce_decomp,
-                            fig6a_hetero_similar, fig6b_hetero_disparate,
-                            fig6c_dynamic_bw)
+                            bench_scenarios, fig2_roofline,
+                            fig3_allreduce_decomp, fig6a_hetero_similar,
+                            fig6b_hetero_disparate, fig6c_dynamic_bw)
     suites = [
         ("fig2_roofline", lambda: fig2_roofline.run()),
         ("fig3_allreduce_decomp", lambda: fig3_allreduce_decomp.run()),
@@ -32,6 +32,7 @@ def main() -> None:
         ("planner_search",
          lambda: bench_planner_search.run(quick=args.quick)),
         ("bench_replan", lambda: bench_replan.run(quick=args.quick)),
+        ("bench_scenarios", lambda: bench_scenarios.run(quick=args.quick)),
     ]
     failures = []
     for name, fn in suites:

@@ -1,10 +1,11 @@
 """Dynamic-network scenarios S1/S2/S3 (paper Fig. 1) end to end.
 
 A training run over a temporal topology: bandwidth drop (S1), straggler
-(S2), node failure (S3).  Each event flows through the DynamicOrchestrator
-(threshold re-plan / ReCycle-style reassignment / Oobleck-style template
-failover), the trainer checkpoints, re-plans, reshards elastically and
-resumes.
+(S2), node failure (S3).  The timeline is expressed as a scenario *trace*
+(repro.scenarios): recorded to JSONL, loaded back, and handed to the
+trainer, which maps event times onto training steps.  Each event flows
+through the DynamicOrchestrator + ReplanEngine; the trainer checkpoints,
+re-plans, reshards elastically and resumes.
 
 PYTHONPATH=src python examples/dynamic_network.py
 """
@@ -13,33 +14,41 @@ from repro.configs import get_config
 from repro.core import NetworkEvent, ParallelPlan, hetero_cluster
 from repro.optim.adamw import AdamWConfig
 from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.scenarios import Trace
 
 topo = hetero_cluster({"RTX4090D": 4, "V100": 4}, gpus_per_node=4)
 print(topo.describe())
 
-events = [
-    (6, NetworkEvent(0.0, "bandwidth", factor=0.3, selector="ib")),   # S1
-    (12, NetworkEvent(0.0, "slowdown", device_id=2, factor=0.4)),     # S2
-    (18, NetworkEvent(0.0, "fail", device_id=7)),                     # S3
-]
+STEPS = 24
+# hand-written timeline over a horizon of STEPS "seconds", one unit per
+# step: S1 at step 6, S2 at step 12, S3 at step 18
+trace = Trace.from_events(
+    "s1s2s3_demo",
+    [NetworkEvent(6.0, "bandwidth", factor=0.3, selector="ib"),   # S1
+     NetworkEvent(12.0, "slowdown", device_id=2, factor=0.4),     # S2
+     NetworkEvent(18.0, "fail", device_id=7)],                    # S3
+    horizon=float(STEPS))
+path = trace.record("/tmp/repro_dyn/s1s2s3_demo.trace.jsonl")
+trace = Trace.load(path)                     # JSONL round-trip
+print(trace.describe(), f"-> {path}")
 
 cfg = TrainerConfig(
     arch=get_config("qwen2_7b").reduced(n_layers=2, d_model=64, vocab=256,
                                         d_ff=128),
-    steps=24, global_batch=8, seq_len=64, ckpt_dir="/tmp/repro_dyn",
+    steps=STEPS, global_batch=8, seq_len=64, ckpt_dir="/tmp/repro_dyn",
     ckpt_every=5, log_every=4,
-    opt=AdamWConfig(peak_lr=2e-3, warmup_steps=3, total_steps=24))
+    opt=AdamWConfig(peak_lr=2e-3, warmup_steps=3, total_steps=STEPS))
 
-trainer = Trainer(cfg, topo=topo, events=events,
+trainer = Trainer(cfg, topo=topo, scenario=trace,
                   plan=ParallelPlan(dp=2, tp=2, pp=2, microbatches=2))
 state, hist = trainer.run()
 
 print("\nadaptation history (paper §2.2 mechanisms):")
-for rec in trainer._orch.history:
+for rec in trainer.adaptations:
     print(f"  t={rec.time:5.1f} {rec.event.kind:9s} -> {rec.action:20s} "
           f"predicted step {rec.old_step_time*1e3:7.1f} -> "
           f"{rec.new_step_time*1e3:7.1f} ms")
 print("\nincremental re-planning engine telemetry:")
-print(trainer._engine.describe())
+print(trainer.engine.describe())
 print(f"\n{trainer.replans} re-plans; final loss {hist[-1]['loss']:.3f} "
       f"(training continued through all events)")

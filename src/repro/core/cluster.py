@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import threading
 from dataclasses import dataclass, field, replace
 from typing import Callable, Iterable, Mapping, Sequence
 
@@ -178,10 +179,21 @@ class NetworkEvent:
     """A change to the topology at time ``t``.
 
     kinds:
-      * ``bandwidth``:  scale edges matching ``selector`` by ``factor`` (S1)
-      * ``slowdown``:   scale device ``device_id`` perf by ``factor`` (S2)
+      * ``bandwidth``:  adjust edges matching ``selector`` by ``factor`` (S1)
+      * ``slowdown``:   adjust device ``device_id`` perf by ``factor`` (S2)
       * ``fail``:       device ``device_id`` leaves the cluster (S3)
       * ``join``:       device ``device_id`` (re-)joins (S3)
+
+    ``mode`` makes composition explicit for ``bandwidth``/``slowdown``:
+
+      * ``"set"`` (default, the historical semantics): the factor is an
+        *absolute* level — ``bw_factor = factor``.  Two overlapping events
+        clobber each other; use it for single-source conditions (a sampled
+        diurnal curve, the fig6c sweep).
+      * ``"scale"``: the factor *multiplies* the current level —
+        ``bw_factor *= factor``.  Overlapping events compose, and an event
+        with the reciprocal factor restores the previous level exactly
+        (multi-tenant congestion bursts, straggler churn).
     """
 
     time: float
@@ -189,6 +201,7 @@ class NetworkEvent:
     device_id: int | None = None
     factor: float = 1.0
     selector: str | None = None          # edge tag selector, e.g. "dci"
+    mode: str = "set"                    # "set" (absolute) | "scale" (compose)
 
 
 # ---------------------------------------------------------------------------
@@ -204,14 +217,34 @@ class ClusterTopology:
                  events: Sequence[NetworkEvent] = ()) -> None:
         self.devices: dict[int, DeviceInstance] = {d.device_id: d for d in devices}
         self.links: dict[tuple[int, int], MultiEdgeLink] = dict(links or {})
-        self.events: list[NetworkEvent] = sorted(events, key=lambda e: e.time)
+        self._events: list[NetworkEvent] = sorted(events, key=lambda e: e.time)
+        # incremental-snapshot cache (see snapshot()): a private materialized
+        # state at time _snap_t, valid while _snap_sig matches.
+        self._version = 0
+        self._snap_state: "ClusterTopology | None" = None
+        self._snap_t = -math.inf
+        self._snap_sig: tuple | None = None
+        self._snap_events: list[NetworkEvent] = []
+        # the planner simulates candidates from a thread pool and every
+        # simulate call snapshots its topology — the cache must not tear
+        self._snap_lock = threading.Lock()
 
     # -- construction -------------------------------------------------------
+
+    @property
+    def events(self) -> list[NetworkEvent]:
+        return self._events
+
+    @events.setter
+    def events(self, events: Sequence[NetworkEvent]) -> None:
+        self._events = sorted(events, key=lambda e: e.time)
+        self._version += 1
 
     def add_link(self, a: int, b: int, *edges: Edge) -> None:
         key = (min(a, b), max(a, b))
         link = self.links.setdefault(key, MultiEdgeLink(a=key[0], b=key[1]))
         link.edges.extend(edges)
+        self._version += 1
 
     def link(self, a: int, b: int) -> MultiEdgeLink | None:
         return self.links.get((min(a, b), max(a, b)))
@@ -256,15 +289,23 @@ class ClusterTopology:
         return [e for e in self.events if t0 <= e.time < t1]
 
     def apply_event(self, ev: NetworkEvent) -> None:
-        """Apply an event in place (the simulator calls this at event time)."""
+        """Apply an event in place (the simulator calls this at event time).
+
+        ``mode="set"`` events overwrite the dynamic factor; ``mode="scale"``
+        events multiply into it (see :class:`NetworkEvent`)."""
+        scale = ev.mode == "scale"
+        if ev.mode not in ("set", "scale"):
+            raise ValueError(f"unknown event mode: {ev.mode}")
         if ev.kind == "bandwidth":
             for link in self.links.values():
                 for e in link.edges:
                     if ev.selector is None or e.tag == ev.selector:
-                        e.bw_factor = ev.factor
+                        e.bw_factor = e.bw_factor * ev.factor if scale \
+                            else ev.factor
         elif ev.kind == "slowdown":
             assert ev.device_id is not None
-            self.devices[ev.device_id].perf_factor = ev.factor
+            d = self.devices[ev.device_id]
+            d.perf_factor = d.perf_factor * ev.factor if scale else ev.factor
         elif ev.kind == "fail":
             assert ev.device_id is not None
             self.devices[ev.device_id].alive = False
@@ -274,19 +315,77 @@ class ClusterTopology:
             self.devices[ev.device_id].perf_factor = ev.factor or 1.0
         else:
             raise ValueError(f"unknown event kind: {ev.kind}")
+        self._version += 1
 
-    def snapshot(self, t: float) -> "ClusterTopology":
-        """Deep-copied topology with all events up to time ``t`` applied."""
+    # -- snapshots (incremental) ----------------------------------------------
+
+    def _copy_state(self) -> "ClusterTopology":
+        """Deep copy of devices + links, no events attached."""
         devs = [replace(d) for d in self.devices.values()]
         links = {
             k: MultiEdgeLink(v.a, v.b, [replace(e) for e in v.edges])
             for k, v in self.links.items()
         }
-        snap = ClusterTopology(devs, links, events=[])
-        for ev in self.events:
-            if ev.time <= t:
-                snap.apply_event(ev)
-        return snap
+        return ClusterTopology(devs, links, events=[])
+
+    def copy(self) -> "ClusterTopology":
+        """Deep copy of the full topology (devices, links, event timeline);
+        the copy's snapshot cache starts cold."""
+        c = self._copy_state()
+        c.events = list(self._events)
+        return c
+
+    def _state_sig(self) -> tuple:
+        """Cheap validity signature for the snapshot cache.  ``_version``
+        covers apply_event/add_link/events-assignment; the events tuple
+        catches in-place list mutation (append/insert, possibly out of
+        order) and the device tuple direct mutation of device fields
+        (templates toggling ``alive``).  Direct edge mutation is not
+        tracked — call :meth:`invalidate_snapshots` after doing that."""
+        return (self._version, tuple(self._events),
+                tuple((d.device_id, d.alive, d.perf_factor)
+                      for d in self.devices.values()))
+
+    def invalidate_snapshots(self) -> None:
+        with self._snap_lock:
+            self._snap_state = None
+            self._snap_sig = None
+            self._snap_t = -math.inf
+            self._snap_events = []
+
+    def snapshot(self, t: float) -> "ClusterTopology":
+        """Deep-copied topology with all events up to time ``t`` applied.
+
+        Replays are incremental: a private materialized state advances from
+        the last queried time, so a monotone sequence of ``snapshot`` calls
+        over an N-event timeline applies each event once (O(N) *event
+        applications* total, each O(links); every call still pays an O(N)
+        signature compare with tiny constants) instead of replaying the
+        whole prefix per call (O(N^2) applications) — the regime scenario
+        traces with hundreds of events put us in.  Going back in time or
+        mutating the base topology rebuilds from scratch."""
+        with self._snap_lock:
+            sig = self._state_sig()
+            if self._snap_state is None or self._snap_sig != sig \
+                    or t < self._snap_t:
+                self._snap_state = self._copy_state()
+                self._snap_t = -math.inf
+                self._snap_sig = sig
+                # private sorted view: in-place appends may have left the
+                # caller-visible list unsorted (any such mutation changes
+                # the signature and lands here, so the view is always fresh)
+                self._snap_events = sorted(self._events,
+                                           key=lambda e: e.time)
+            if self._snap_t < t:
+                for ev in self._snap_events:
+                    if self._snap_t < ev.time <= t:
+                        self._snap_state.apply_event(ev)
+                    elif ev.time > t:
+                        break
+                self._snap_t = t
+                # applying events bumps the *base* signature only via our
+                # own private copy, so the cache signature stays as computed
+            return self._snap_state._copy_state()
 
     # -- pretty ----------------------------------------------------------------
 

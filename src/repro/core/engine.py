@@ -141,12 +141,8 @@ class _CacheEntry:
 
 
 def _plan_key(plan: ParallelPlan) -> tuple:
-    """Structural identity of a plan — everything the simulator reads.
-    ``meta`` is deliberately excluded: plans differing only in provenance
-    share one score."""
-    return (plan.dp, plan.tp, plan.pp, plan.ep, plan.sp, plan.microbatches,
-            plan.stages, plan.batch_shares, plan.grad_sync, plan.zero1,
-            plan.remat, plan.grad_compression)
+    """Structural identity of a plan — everything the simulator reads."""
+    return plan.structural_key()
 
 
 class _CacheContext:
@@ -368,10 +364,19 @@ class ReplanEngine:
             # Rebuild the warm-start portfolio from the plans this full
             # search materialized for its own context.  Strategy points that
             # keep a stale prior score still rank in future re-scores.
+            # Canonical ordering matters: the context's plan memo is filled
+            # in thread-completion order, and downstream tie-breaks (stable
+            # rank sort, strict-< best selection) follow portfolio order —
+            # identical replays must pick identical plans.
             stale = {key: s for key, _, s in self._portfolio if s is not None}
             self._portfolio = [
                 (key, p, s if s is not None else stale.get(key))
-                for key, p, s in ctx.materialized()]
+                for key, p, s in sorted(
+                    ctx.materialized(),
+                    key=lambda item: (item[0][0].dp, item[0][0].tp,
+                                      item[0][0].pp, item[0][0].ep,
+                                      item[0][0].microbatches,
+                                      item[0][0].grad_sync, item[0][1]))]
         res = ReplanResult(plan=plan, predicted=sim, path=path,
                            wall_time=time.perf_counter() - t0, stats=stats,
                            cold=cold)
@@ -434,9 +439,15 @@ class ReplanEngine:
             return self._replan_straggler(topo)
         ratio = 1.0
         if event is not None and event.kind == "bandwidth":
-            prev = self._bw_factor.get(event.selector, 1.0)
-            ratio = event.factor / prev if prev > 0 else event.factor
-            self._bw_factor[event.selector] = event.factor
+            if event.mode == "scale":
+                # compositional event: the factor IS the relative change
+                ratio = event.factor
+                prev = self._bw_factor.get(event.selector, 1.0)
+                self._bw_factor[event.selector] = prev * event.factor
+            else:
+                prev = self._bw_factor.get(event.selector, 1.0)
+                ratio = event.factor / prev if prev > 0 else event.factor
+                self._bw_factor[event.selector] = event.factor
         return self._replan_bandwidth(topo, ratio)
 
     def _rescore_portfolio(self, topo: ClusterTopology, ctx: _CacheContext,

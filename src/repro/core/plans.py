@@ -58,6 +58,15 @@ class ParallelPlan:
     def layers_of_stage(self, s: int) -> tuple[int, ...]:
         return self.stages[s].layers if self.stages else ()
 
+    def structural_key(self) -> tuple:
+        """Identity of everything the simulator reads; ``meta`` is excluded
+        so plans differing only in provenance compare equal (score-cache
+        keys, replan-switch detection)."""
+        return (self.dp, self.tp, self.pp, self.ep, self.sp,
+                self.microbatches, self.stages, self.batch_shares,
+                self.grad_sync, self.zero1, self.remat,
+                self.grad_compression)
+
     def validate(self, n_layers: int) -> None:
         if self.stages:
             got = [l for st in self.stages for l in st.layers]

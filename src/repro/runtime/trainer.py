@@ -63,11 +63,42 @@ class Trainer:
                  mesh: Mesh | None = None,
                  plan: ParallelPlan | None = None,
                  topo: ClusterTopology | None = None,
-                 events: Sequence[tuple[int, NetworkEvent]] = ()):
+                 events: Sequence[tuple[int, NetworkEvent]] = (),
+                 scenario: "str | object | None" = None):
         self.cfg = cfg
         self.model = LM(cfg.arch)
         self.plan = plan
         self.topo = topo
+        self.trace = None
+        events = list(events)
+        if scenario is not None:
+            # a catalog name or a repro.scenarios.Trace: event times map
+            # onto training steps via Trace.to_step_events, and a catalog
+            # name also supplies the topology when none was given
+            from repro.scenarios import Trace, build_trace, get_scenario
+            if isinstance(scenario, str):
+                self.trace = build_trace(scenario, seed=cfg.seed)
+                if topo is None:
+                    topo = self.topo = get_scenario(scenario).make_topology()
+            elif isinstance(scenario, Trace):
+                if topo is None:
+                    raise ValueError(
+                        "an explicit Trace needs an explicit topo=")
+                self.trace = scenario
+            else:
+                raise TypeError(f"scenario must be a catalog name or Trace, "
+                                f"got {type(scenario).__name__}")
+            events += self.trace.to_step_events(cfg.steps)
+        if topo is not None:
+            # fail fast on a trace/topology mismatch instead of KeyError-ing
+            # mid-run (e.g. a 16-device catalog trace on an 8-device topo)
+            missing = sorted({ev.device_id for _, ev in events
+                              if ev.device_id is not None}
+                             - set(topo.devices))
+            if missing:
+                raise ValueError(
+                    f"events reference device ids {missing} not present "
+                    f"in the topology ({sorted(topo.devices)})")
         self.events = sorted(events, key=lambda e: e[0])
         self.saver = AsyncSaver()
         self.history: list[dict] = []
@@ -93,6 +124,19 @@ class Trainer:
                 model=desc, global_batch=cfg.global_batch, seq=cfg.seq_len,
                 engine=self._engine)
         self._build(mesh)
+
+    # -- public adaptation telemetry ------------------------------------------
+
+    @property
+    def adaptations(self) -> list:
+        """Adaptation records (one per handled event) — the public view of
+        the orchestrator history; empty when no topology was attached."""
+        return list(self._orch.history) if self._orch is not None else []
+
+    @property
+    def engine(self):
+        """The incremental ReplanEngine (None when no topology attached)."""
+        return self._engine
 
     # -- (re)build against the current mesh/plan -----------------------------
 

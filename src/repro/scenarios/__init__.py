@@ -1,0 +1,24 @@
+"""Scenario subsystem: cloud-environment trace generation, record/replay,
+and parallel multi-scenario evaluation (the substrate for every adaptability
+claim — paper §2.2 dynamic scenarios, §4 parallel simulation).
+
+  * :mod:`repro.scenarios.generators` — seeded stochastic event generators
+    (spot preemption, diurnal WAN, congestion bursts, straggler churn,
+    cross-region degradation),
+  * :mod:`repro.scenarios.trace` — the versioned JSONL trace format with
+    ``record``/``load`` round-trip,
+  * :mod:`repro.scenarios.catalog` — the named scenario registry,
+  * :mod:`repro.scenarios.harness` — replay through the simulator +
+    ``ReplanEngine`` with static/adapted/oracle policies, process-parallel
+    across scenarios.
+"""
+
+from .catalog import (ScenarioSpec, build, build_trace, get_scenario,
+                      list_scenarios, register)
+from .generators import (congestion_bursts, diurnal_bandwidth,
+                         link_degradation, spot_preemptions, straggler_churn)
+from .harness import (HarnessConfig, PolicyResult, ScenarioHarness,
+                      ScenarioReport, run_scenario)
+from .trace import TRACE_FORMAT, TRACE_VERSION, Trace
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,176 @@
+"""Named scenario catalog: cloud-environment families ready to replay.
+
+Each :class:`ScenarioSpec` bundles a topology factory with a seeded event
+generator; :func:`build_trace` turns (name, seed) into a reproducible
+:class:`Trace` and :func:`build` additionally instantiates the topology.
+Identical seeds produce byte-identical traces (the determinism gate).
+
+Registered families:
+
+===================== ======================================================
+name                  what
+===================== ======================================================
+cloud_spot            spot-instance preemption/rejoin churn on a mixed
+                      RTX4090D + V100 fleet (Poisson arrivals, S3)
+diurnal_wan           day/night WAN bandwidth curve on the inter-node "ib"
+                      fabric of a 16x V100 cluster (S1, absolute-set)
+congested_multitenant overlapping multi-tenant congestion bursts with staged
+                      decay on "ib" (S1, scale-mode composition)
+straggler_churn       devices degrade and recover on a heterogeneous node
+                      pair (S2, scale-mode)
+cross_region          cross-region DCI link flaps between two TPU pods (S1)
+fig6c_dynamic_bw      the fig6c benchmark timeline re-expressed as a trace:
+                      nominal -> 0.2x -> 4x fabric bandwidth (deterministic)
+===================== ======================================================
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+from repro.core import (ClusterTopology, NetworkEvent, hetero_cluster,
+                        homogeneous_cluster, multi_pod_tpu)
+
+from . import generators as gen
+from .trace import Trace
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """One catalog entry: topology factory + seeded event generator."""
+
+    name: str
+    description: str
+    make_topology: Callable[[], ClusterTopology]
+    make_events: Callable[[random.Random, float], list[NetworkEvent]]
+    horizon: float = 600.0
+    deterministic: bool = False        # events independent of the seed
+    tags: tuple[str, ...] = ()
+
+
+_REGISTRY: dict[str, ScenarioSpec] = {}
+
+
+def register(spec: ScenarioSpec) -> ScenarioSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"scenario {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; available: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def list_scenarios() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def build_trace(name: str, seed: int = 0) -> Trace:
+    """Generate the named scenario's trace for ``seed`` (reproducible)."""
+    spec = get_scenario(name)
+    rng = random.Random(seed)
+    events = spec.make_events(rng, spec.horizon)
+    return Trace(name=spec.name, horizon=spec.horizon, events=tuple(events),
+                 seed=seed, meta=(("deterministic", spec.deterministic),
+                                  ("family", spec.name)))
+
+
+def build(name: str, seed: int = 0) -> tuple[ClusterTopology, Trace]:
+    """Topology + trace for the named scenario; the trace's events are
+    attached to the topology's timeline, ready for replay."""
+    spec = get_scenario(name)
+    trace = build_trace(name, seed)
+    topo = spec.make_topology()
+    topo.events = trace.to_events()
+    return topo, trace
+
+
+# ---------------------------------------------------------------------------
+# Registered families
+# ---------------------------------------------------------------------------
+
+
+register(ScenarioSpec(
+    name="cloud_spot",
+    description="spot-instance preemption/rejoin churn, mixed fleet (S3)",
+    make_topology=lambda: hetero_cluster({"RTX4090D": 8, "V100": 8},
+                                         gpus_per_node=4),
+    make_events=lambda rng, horizon: gen.spot_preemptions(
+        rng, list(range(16)), horizon, preempt_rate=5.0 / horizon,
+        restore_mean=horizon / 4),
+    tags=("S3", "fail", "join"),
+))
+
+register(ScenarioSpec(
+    name="diurnal_wan",
+    description="day/night WAN bandwidth curve on the ib fabric (S1)",
+    make_topology=lambda: homogeneous_cluster(16, "V100", gpus_per_node=8),
+    make_events=lambda rng, horizon: gen.diurnal_bandwidth(
+        rng, horizon, period=horizon / 2, floor=0.25, selector="ib",
+        samples_per_period=7),
+    tags=("S1", "bandwidth"),
+))
+
+register(ScenarioSpec(
+    name="congested_multitenant",
+    description="overlapping multi-tenant congestion bursts on ib (S1)",
+    make_topology=lambda: homogeneous_cluster(8, "V100", gpus_per_node=4),
+    make_events=lambda rng, horizon: gen.congestion_bursts(
+        rng, horizon, burst_rate=7.0 / horizon, selector="ib",
+        depth_range=(0.3, 0.7), duration_range=(horizon / 20, horizon / 6),
+        decay_steps=2),
+    tags=("S1", "bandwidth", "scale"),
+))
+
+register(ScenarioSpec(
+    name="straggler_churn",
+    description="devices degrade and recover on a hetero node pair (S2)",
+    make_topology=lambda: hetero_cluster({"RTX4090D": 4, "V100": 4},
+                                         gpus_per_node=4),
+    make_events=lambda rng, horizon: gen.straggler_churn(
+        rng, list(range(8)), horizon, rate=6.0 / horizon,
+        slow_range=(0.3, 0.7), recover_mean=horizon / 8),
+    tags=("S2", "slowdown"),
+))
+
+register(ScenarioSpec(
+    name="cross_region",
+    description="cross-region DCI link flaps between two TPU pods (S1)",
+    make_topology=lambda: multi_pod_tpu(pods=2, chips_per_pod=16),
+    make_events=lambda rng, horizon: gen.link_degradation(
+        rng, horizon, selector="dci", rate=4.0 / horizon,
+        severity_range=(0.1, 0.5), repair_mean=horizon / 6),
+    tags=("S1", "bandwidth", "dci"),
+))
+
+
+def _fig6c_events(rng: random.Random,
+                  horizon: float) -> list[NetworkEvent]:
+    # the fig6c benchmark's two network conditions as one timeline:
+    # nominal fabric, then the 0.2x low-bandwidth leg, then 4x unconstrained
+    del rng  # deterministic family
+    return [
+        NetworkEvent(round(horizon / 3, 6), "bandwidth", factor=0.2,
+                     mode="set"),
+        NetworkEvent(round(2 * horizon / 3, 6), "bandwidth", factor=4.0,
+                     mode="set"),
+    ]
+
+
+register(ScenarioSpec(
+    name="fig6c_dynamic_bw",
+    description="fig6c bandwidth sweep (0.2x / 4x) as a trace (S1)",
+    make_topology=lambda: hetero_cluster({"V100": 8},
+                                         intra_bw_map={"V100": 25e9},
+                                         inter_bw=12.5e9, gpus_per_node=8),
+    make_events=_fig6c_events,
+    deterministic=True,
+    tags=("S1", "bandwidth", "paper"),
+))

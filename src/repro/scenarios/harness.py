@@ -1,0 +1,324 @@
+"""Scenario replay harness: trace -> (static | adapted | oracle) metrics.
+
+Replays a :class:`Trace` against the analytic simulator through the PR-1
+:class:`ReplanEngine` (via :class:`DynamicOrchestrator`) and reports
+per-scenario adaptation metrics:
+
+  * ``static``  — the cold t=0 plan, never re-planned (what a planner with
+    no dynamic awareness delivers; after a failure it may be infeasible,
+    contributing zero throughput for that interval),
+  * ``adapted`` — every event flows through ``DynamicOrchestrator.adapt``;
+    measured re-plan latency plus a fixed reconfiguration overhead is
+    charged against the throughput budget on every plan switch,
+  * ``oracle``  — a clairvoyant baseline: a fresh full search on every
+    interval's topology with zero re-plan cost (the adaptability headroom).
+
+Step-time timelines are derived per inter-event interval; throughput is the
+time-weighted number of optimizer steps completed inside the horizon.
+
+:meth:`ScenarioHarness.run_many` evaluates several scenarios at once, either
+sequentially or **process-parallel** — the paper accelerates its search
+"through parallel execution within the simulator"; this applies the same
+strategy one level up, across scenarios (the planner's per-candidate
+``ThreadPoolExecutor`` stays GIL-bound, so scenario-level parallelism needs
+processes).  ``repro.core`` is dependency-free, so worker start-up is cheap.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+import multiprocessing
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass, field
+from typing import Sequence
+
+from repro.core import (ClusterTopology, DynamicOrchestrator, ModelDesc,
+                        NetworkEvent, ParallelPlan, ReplanEngine,
+                        StrategyCache, simulate_training_step)
+
+from . import catalog
+from .trace import Trace
+
+
+# ---------------------------------------------------------------------------
+# Configuration / results
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HarnessConfig:
+    """Everything a (possibly remote) scenario replay needs — picklable, so
+    :meth:`ScenarioHarness.run_many` can ship it to worker processes."""
+
+    model: ModelDesc
+    global_batch: int
+    seq: int
+    max_candidates: int | None = None
+    n_workers: int | None = None
+    # seconds charged per *plan switch*: checkpoint reload + reshard
+    # (cf. the Oobleck/ReCycle reconfiguration-cost discussion, paper §2.2.2)
+    reconfig_overhead: float = 2.0
+    oracle: bool = True
+    replan_threshold: float = 1.10
+
+
+@dataclass(frozen=True)
+class PolicyResult:
+    """One replan policy's outcome over a scenario."""
+
+    name: str
+    avg_step: float                         # time-weighted mean step time, s
+    steps: float                            # optimizer steps completed
+    timeline: tuple[tuple[float, float], ...]  # (interval start, step time)
+
+
+@dataclass(frozen=True)
+class ScenarioReport:
+    scenario: str
+    seed: int
+    n_devices: int
+    n_events: int
+    horizon: float
+    static: PolicyResult
+    adapted: PolicyResult
+    oracle: PolicyResult | None
+    adaptations: int                         # events processed
+    replans: int                             # actual plan switches
+    actions: tuple[tuple[str, int], ...]     # replan-path histogram
+    replan_latency_mean_ms: float
+    replan_latency_max_ms: float
+    wall_s: float
+
+    @property
+    def adapted_over_static(self) -> float:
+        return _ratio(self.adapted.avg_step, self.static.avg_step)
+
+    @property
+    def adapted_over_oracle(self) -> float:
+        if self.oracle is None:
+            return float("nan")
+        return _ratio(self.adapted.avg_step, self.oracle.avg_step)
+
+    def to_row(self) -> dict:
+        row = {
+            "scenario": self.scenario, "seed": self.seed,
+            "devices": self.n_devices, "events": self.n_events,
+            "static_step_s": _round(self.static.avg_step),
+            "adapted_step_s": _round(self.adapted.avg_step),
+            "oracle_step_s": _round(self.oracle.avg_step)
+            if self.oracle else None,
+            "adapted_over_static": _round(self.adapted_over_static),
+            "adapted_over_oracle": _round(self.adapted_over_oracle),
+            "replans": self.replans,
+            "actions": "|".join(f"{k}:{v}" for k, v in self.actions),
+            "replan_ms_mean": round(self.replan_latency_mean_ms, 1),
+            "replan_ms_max": round(self.replan_latency_max_ms, 1),
+            "wall_s": round(self.wall_s, 2),
+        }
+        return row
+
+
+def _round(x: float, nd: int = 4) -> float:
+    return round(x, nd) if math.isfinite(x) else x
+
+
+def _ratio(a: float, b: float) -> float:
+    if not math.isfinite(a) or not math.isfinite(b) or b <= 0:
+        if math.isinf(b) and math.isfinite(a):
+            return 0.0                      # baseline infeasible, policy fine
+        return float("nan") if not (math.isinf(a) and math.isfinite(b)) \
+            else math.inf
+    return a / b
+
+
+# ---------------------------------------------------------------------------
+# Replay
+# ---------------------------------------------------------------------------
+
+
+def _step_time(plan: ParallelPlan, cfg: HarnessConfig,
+               topo: ClusterTopology, t: float) -> float:
+    try:
+        return simulate_training_step(
+            plan, cfg.model, topo, global_batch=cfg.global_batch,
+            seq=cfg.seq, at_time=t).step_time
+    except (ValueError, ZeroDivisionError):
+        return math.inf
+
+
+def _aggregate(name: str, segs: Sequence[tuple[float, float, float]],
+               horizon: float) -> PolicyResult:
+    """segs: (interval start, step time, overhead charged at interval
+    start).  Throughput = sum of d_i/s_i over the overhead-trimmed
+    intervals; overhead exceeding its interval carries into the next one
+    (a reconfiguration does not get cheaper because the next event came
+    quickly).  avg step = horizon / steps."""
+    steps = 0.0
+    carry = 0.0
+    starts = [t for t, _, _ in segs]
+    for (t0, s, oh), t1 in zip(segs, starts[1:] + [horizon]):
+        oh += carry
+        d = t1 - t0
+        carry = max(0.0, oh - d)
+        usable = max(0.0, d - oh)
+        if math.isfinite(s) and s > 0:
+            steps += usable / s
+    avg = horizon / steps if steps > 0 else math.inf
+    return PolicyResult(name=name, avg_step=avg, steps=round(steps, 3),
+                        timeline=tuple((t, _round(s)) for t, s, _ in segs))
+
+
+def run_scenario(cfg: HarnessConfig, scenario: str | Trace, seed: int = 0,
+                 topo: ClusterTopology | None = None) -> ScenarioReport:
+    """Replay one scenario end-to-end; see the module docstring for the
+    three policies.  ``scenario`` is a catalog name (the topology comes from
+    the spec) or an explicit :class:`Trace` (then ``topo`` is required)."""
+    wall0 = time.perf_counter()
+    if isinstance(scenario, Trace):
+        if topo is None:
+            raise ValueError("an explicit Trace needs an explicit topology")
+        trace = scenario
+    else:
+        built_topo, trace = catalog.build(scenario, seed)
+        if topo is None:
+            topo = built_topo
+    # replay on a private copy: attaching the trace must not clobber a
+    # caller-provided topology's own event timeline
+    topo = topo.copy()
+    topo.events = trace.to_events()
+    horizon = trace.horizon
+    # t == horizon included: the interval it opens has zero width (no
+    # throughput effect) but the event still flows through the orchestrator,
+    # matching the Trainer's to_step_events behaviour — and from_events()
+    # defaults the horizon to the *last* event's time, which must not vanish
+    boundaries = [0.0] + [t for t in trace.event_times() if 0.0 < t <= horizon]
+
+    engine = ReplanEngine(cfg.model, global_batch=cfg.global_batch,
+                          seq=cfg.seq, cache=StrategyCache(),
+                          max_candidates=cfg.max_candidates,
+                          n_workers=cfg.n_workers)
+    orch = DynamicOrchestrator(model=cfg.model, global_batch=cfg.global_batch,
+                               seq=cfg.seq, engine=engine,
+                               replan_threshold=cfg.replan_threshold)
+    cold = engine.plan(topo.snapshot(0.0))
+    plan0 = cold.plan
+
+    # -- static: the t=0 plan, never revisited ------------------------------
+    static_segs = [(t, _step_time(plan0, cfg, topo, t), 0.0)
+                   for t in boundaries]
+
+    # -- adapted: every event through the orchestrator ----------------------
+    plan = plan0
+    adapted_segs: list[tuple[float, float, float]] = \
+        [(0.0, _step_time(plan0, cfg, topo, 0.0), 0.0)]
+    latencies: list[float] = []
+    replans = 0
+    grouped = [(t, list(evs)) for t, evs in
+               itertools.groupby(trace.events, key=lambda e: e.time)
+               if 0.0 < t <= horizon]
+    for t, evs in grouped:
+        overhead = 0.0
+        for ev in evs:
+            t0 = time.perf_counter()
+            new_plan = orch.adapt(plan, topo, ev)
+            lat = time.perf_counter() - t0
+            latencies.append(lat)
+            if new_plan.structural_key() != plan.structural_key():
+                replans += 1
+                overhead += lat + cfg.reconfig_overhead
+            else:
+                overhead += lat
+            plan = new_plan
+        adapted_segs.append((t, _step_time(plan, cfg, topo, t), overhead))
+
+    # -- oracle: clairvoyant full re-plan per interval, zero cost -----------
+    oracle_res = None
+    if cfg.oracle:
+        oracle_engine = ReplanEngine(cfg.model, global_batch=cfg.global_batch,
+                                     seq=cfg.seq, cache=StrategyCache(),
+                                     max_candidates=cfg.max_candidates,
+                                     n_workers=cfg.n_workers)
+        oracle_segs = []
+        for t in boundaries:
+            try:
+                r = oracle_engine.plan(topo.snapshot(t))
+                oracle_segs.append((t, r.predicted.step_time, 0.0))
+            except RuntimeError:
+                oracle_segs.append((t, math.inf, 0.0))
+        oracle_res = _aggregate("oracle", oracle_segs, horizon)
+
+    actions: dict[str, int] = {}
+    for rec in orch.history:
+        actions[rec.action] = actions.get(rec.action, 0) + 1
+    return ScenarioReport(
+        scenario=trace.name, seed=trace.seed if trace.seed is not None
+        else seed,
+        n_devices=len(topo.devices), n_events=len(trace),
+        horizon=horizon,
+        static=_aggregate("static", static_segs, horizon),
+        adapted=_aggregate("adapted", adapted_segs, horizon),
+        oracle=oracle_res,
+        adaptations=len(orch.history), replans=replans,
+        actions=tuple(sorted(actions.items())),
+        replan_latency_mean_ms=1e3 * (sum(latencies) / len(latencies))
+        if latencies else 0.0,
+        replan_latency_max_ms=1e3 * max(latencies, default=0.0),
+        wall_s=time.perf_counter() - wall0)
+
+
+def _worker(payload: tuple[HarnessConfig, str, int]) -> ScenarioReport:
+    cfg, name, seed = payload
+    return run_scenario(cfg, name, seed)
+
+
+# ---------------------------------------------------------------------------
+# Multi-scenario evaluation
+# ---------------------------------------------------------------------------
+
+
+class ScenarioHarness:
+    """Replays catalog scenarios and evaluates adaptation quality.
+
+    >>> h = ScenarioHarness(model, global_batch=64, seq=2048)
+    >>> rep = h.run("cloud_spot", seed=1)
+    >>> reps = h.run_many([("cloud_spot", 0), ("diurnal_wan", 0)],
+    ...                   parallel=True)
+    """
+
+    def __init__(self, model: ModelDesc, *, global_batch: int, seq: int,
+                 max_candidates: int | None = None,
+                 n_workers: int | None = None,
+                 reconfig_overhead: float = 2.0, oracle: bool = True,
+                 replan_threshold: float = 1.10):
+        self.cfg = HarnessConfig(
+            model=model, global_batch=global_batch, seq=seq,
+            max_candidates=max_candidates, n_workers=n_workers,
+            reconfig_overhead=reconfig_overhead, oracle=oracle,
+            replan_threshold=replan_threshold)
+
+    def run(self, scenario: str | Trace, seed: int = 0,
+            topo: ClusterTopology | None = None) -> ScenarioReport:
+        return run_scenario(self.cfg, scenario, seed, topo=topo)
+
+    def run_many(self, items: Sequence[tuple[str, int] | str], *,
+                 parallel: bool = False,
+                 max_workers: int | None = None) -> list[ScenarioReport]:
+        """Replay several catalog scenarios; ``items`` are names or
+        (name, seed) pairs.  With ``parallel=True`` scenarios run in worker
+        processes (results keep input order)."""
+        norm: list[tuple[str, int]] = [
+            it if isinstance(it, tuple) else (it, 0) for it in items]
+        payloads = [(self.cfg, name, seed) for name, seed in norm]
+        if not parallel or len(payloads) <= 1:
+            return [_worker(p) for p in payloads]
+        workers = max_workers or min(len(payloads), os.cpu_count() or 1)
+        # spawn, not fork: the caller may be multi-threaded (planner thread
+        # pools, JAX) and fork()ing a threaded parent risks deadlocked
+        # children; workers only import dependency-free repro.core, so a
+        # fresh interpreter starts in well under a second
+        ctx = multiprocessing.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as ex:
+            return list(ex.map(_worker, payloads))

@@ -72,6 +72,96 @@ def test_hetero_cluster_types_and_intra_bw():
     assert "nvlink" in tags_v
 
 
+def test_apply_event_snapshot_roundtrip_all_kinds():
+    """All four event kinds round-trip through apply_event/snapshot,
+    including a join that revives a failed device."""
+    topo = homogeneous_cluster(4, "V100", gpus_per_node=4)
+    topo.events = [
+        NetworkEvent(1.0, "bandwidth", factor=0.5, selector="nvlink"),
+        NetworkEvent(2.0, "slowdown", device_id=1, factor=0.4),
+        NetworkEvent(3.0, "fail", device_id=2),
+        NetworkEvent(4.0, "join", device_id=2, factor=0.8),
+    ]
+    s1 = topo.snapshot(1.5)
+    assert s1.link(0, 1).edges[0].bw_factor == pytest.approx(0.5)
+    s2 = topo.snapshot(2.5)
+    assert s2.device(1).perf_factor == pytest.approx(0.4)
+    s3 = topo.snapshot(3.5)
+    assert s3.alive_ids() == [0, 1, 3]
+    s4 = topo.snapshot(4.5)
+    assert s4.alive_ids() == [0, 1, 2, 3]          # join after fail revives
+    assert s4.device(2).perf_factor == pytest.approx(0.8)
+    # earlier state still reconstructable after later queries
+    assert topo.snapshot(0.5).device(1).perf_factor == 1.0
+
+
+def test_unknown_event_kind_and_mode_raise():
+    topo = homogeneous_cluster(2, "V100", gpus_per_node=2)
+    with pytest.raises(ValueError, match="unknown event kind"):
+        topo.apply_event(NetworkEvent(0.0, "meteor", device_id=0))
+    with pytest.raises(ValueError, match="unknown event mode"):
+        topo.apply_event(NetworkEvent(0.0, "bandwidth", factor=0.5,
+                                      mode="wobble"))
+
+
+def test_scale_mode_composes_and_restores():
+    """Overlapping scale-mode events multiply; reciprocal factors restore
+    the previous level exactly (the congestion-burst contract).  Set-mode
+    events remain absolute."""
+    topo = homogeneous_cluster(4, "V100", gpus_per_node=2)
+    e = topo.link(0, 1).edges[0]
+    topo.apply_event(NetworkEvent(1.0, "bandwidth", factor=0.5,
+                                  selector=e.tag, mode="scale"))
+    topo.apply_event(NetworkEvent(2.0, "bandwidth", factor=0.5,
+                                  selector=e.tag, mode="scale"))
+    assert e.bw_factor == pytest.approx(0.25)       # bursts compose
+    topo.apply_event(NetworkEvent(3.0, "bandwidth", factor=2.0,
+                                  selector=e.tag, mode="scale"))
+    topo.apply_event(NetworkEvent(4.0, "bandwidth", factor=2.0,
+                                  selector=e.tag, mode="scale"))
+    assert e.bw_factor == pytest.approx(1.0)        # full restore
+    topo.apply_event(NetworkEvent(5.0, "bandwidth", factor=0.3,
+                                  selector=e.tag, mode="set"))
+    topo.apply_event(NetworkEvent(6.0, "bandwidth", factor=0.7,
+                                  selector=e.tag, mode="set"))
+    assert e.bw_factor == pytest.approx(0.7)        # set stays absolute
+    # slowdown composes the same way
+    topo.apply_event(NetworkEvent(7.0, "slowdown", device_id=0, factor=0.5,
+                                  mode="scale"))
+    topo.apply_event(NetworkEvent(8.0, "slowdown", device_id=0, factor=0.5,
+                                  mode="scale"))
+    assert topo.device(0).perf_factor == pytest.approx(0.25)
+
+
+def test_snapshot_incremental_cache_matches_full_replay():
+    """The incremental snapshot cache must be invisible: any query order
+    matches a from-scratch replay, and base-topology mutations invalidate."""
+    def fresh():
+        t = homogeneous_cluster(4, "V100", gpus_per_node=4)
+        t.events = [NetworkEvent(float(i), "bandwidth",
+                                 factor=0.9 ** (i % 5 + 1),
+                                 selector="nvlink", mode="set")
+                    for i in range(1, 40)] + \
+                   [NetworkEvent(10.5, "slowdown", device_id=1, factor=0.5),
+                    NetworkEvent(20.5, "fail", device_id=3),
+                    NetworkEvent(30.5, "join", device_id=3)]
+        return t
+
+    def state(t):
+        return ([(d.device_id, d.alive, d.perf_factor)
+                 for d in t.devices.values()],
+                [(k, e.tag, e.bw_factor) for k, link in sorted(t.links.items())
+                 for e in link.edges])
+
+    inc = fresh()
+    for t in (0.0, 5.0, 10.7, 20.7, 25.0, 30.7, 39.0, 12.0, 39.0):
+        assert state(inc.snapshot(t)) == state(fresh().snapshot(t)), t
+    # mutating the base invalidates the cache
+    inc.apply_event(NetworkEvent(0.0, "slowdown", device_id=0, factor=0.25))
+    snap = inc.snapshot(5.0)
+    assert snap.device(0).perf_factor == pytest.approx(0.25)
+
+
 def test_roofline_eq1_regimes():
     spec = DEVICE_PROFILES["V100"]
     # compute-bound: huge flops, tiny traffic

@@ -87,6 +87,27 @@ def test_bandwidth_event_replans_only_when_worth_it():
     assert new == plan
 
 
+def test_trainer_accepts_scenario_trace(tmp_path):
+    """A Trace drives the trainer: event times map onto steps, adaptation
+    records surface through the public ``adaptations`` property."""
+    from repro.scenarios import Trace
+
+    topo = hetero_cluster({"RTX4090D": 4, "V100": 4}, gpus_per_node=4)
+    trace = Trace.from_events(
+        "unit", [NetworkEvent(5.0, "slowdown", device_id=2, factor=0.4)],
+        horizon=10.0)
+    cfg = _tcfg(tmp_path, steps=10)
+    tr = Trainer(cfg, topo=topo, scenario=trace,
+                 plan=ParallelPlan(dp=2, tp=2, pp=2, microbatches=2))
+    assert tr.trace is trace
+    assert [s for s, _ in tr.events] == [5]        # t=5 of 10 -> step 5
+    state, hist = tr.run()
+    assert tr.replans == 1 and len(tr.adaptations) == 1
+    assert tr.adaptations[0].event.kind == "slowdown"
+    assert tr.engine is not None and tr.engine.history
+    assert np.isfinite(hist[-1]["loss"])
+
+
 def test_plan_templates_failover_lookup():
     topo = hetero_cluster({"V100": 8}, gpus_per_node=8)
     desc = _tiny_cfg().to_model_desc()
