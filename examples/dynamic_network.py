@@ -50,5 +50,14 @@ for rec in trainer.adaptations:
           f"{rec.new_step_time*1e3:7.1f} ms")
 print("\nincremental re-planning engine telemetry:")
 print(trainer.engine.describe())
+print("\nmodeled reconfiguration charges (repro.core.reconfig, calibrated "
+      "against the measured checkpoint-restore path):")
+for r in trainer.engine.history:
+    if not r.cold:
+        verdict = "kept incumbent" if r.kept else "switched"
+        print(f"  {r.path:22s} modeled switch cost {r.switch_cost:6.3f} s "
+              f"-> {verdict}")
+print(f"  calibrated store bandwidth "
+      f"{trainer.engine.reconfig.io_bw / 1e9:.2f} GB/s")
 print(f"\n{trainer.replans} re-plans; final loss {hist[-1]['loss']:.3f} "
       f"(training continued through all events)")

@@ -21,6 +21,7 @@ from .planner import (PlanResult, SearchStats, StrategyPoint,
                       enumerate_strategies, exhaustive_assign, greedy_assign,
                       hetero_batch_shares, materialize_plan, plan_hybrid,
                       point_lower_bound)
+from .reconfig import ReconfigCost, ReconfigCostModel, plan_sequence_dp
 from .plans import (ParallelPlan, StageAssignment, megatron_default_plan,
                     split_devices, stages_from_sizes, uniform_stages)
 from .simulator import (EpochSim, SimResult, StepSim, check_memory,

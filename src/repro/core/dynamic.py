@@ -130,6 +130,10 @@ class AdaptationRecord:
     action: str
     old_step_time: float
     new_step_time: float
+    # modeled reconfiguration charge for this adaptation's plan switch
+    # (ReconfigCostModel via the engine; 0.0 when the plan was kept or the
+    # engine-less legacy path was taken)
+    switch_cost: float = 0.0
 
 
 @dataclass
@@ -182,14 +186,23 @@ class DynamicOrchestrator:
             res = self.engine.replan(snap, event)
             new_plan, action = res.plan, res.path
             new_step = res.predicted.step_time     # scored on this snapshot
-            if action == "bandwidth-rescore" and \
-                    old.step_time / max(res.predicted.step_time, 1e-12) \
+            if getattr(res, "kept", False):
+                # the engine's switch-cost hysteresis priced the move off
+                # the incumbent (ReconfigCostModel) and kept it
+                action = "keep"
+            elif action == "bandwidth-rescore" \
+                    and getattr(self.engine, "switch_horizon_s", None) \
+                    is None \
+                    and old.step_time / max(res.predicted.step_time, 1e-12) \
                     < self.replan_threshold:
-                # not worth a plan switch: keep the running plan
+                # legacy threshold hysteresis: only applies when no
+                # remaining-horizon budget makes the cost model decisive
                 new_plan, action, new_step = plan, "keep", old.step_time
             self.history.append(AdaptationRecord(
                 time=event.time, event=event, action=action,
-                old_step_time=old.step_time, new_step_time=new_step))
+                old_step_time=old.step_time, new_step_time=new_step,
+                switch_cost=0.0 if action == "keep"
+                else getattr(res, "switch_cost", 0.0)))
             return new_plan
         if event.kind == "fail":
             n_alive = len(snap.alive_ids())

@@ -53,6 +53,7 @@ from .cluster import ClusterTopology, NetworkEvent
 from .opgraph import ModelDesc
 from .planner import SearchStats, StrategyPoint, _divisors, plan_hybrid
 from .plans import ParallelPlan
+from .reconfig import ReconfigCostModel
 from .simulator import StepSim, simulate_training_step
 
 # ---------------------------------------------------------------------------
@@ -279,11 +280,17 @@ class ReplanResult:
     plan: ParallelPlan
     predicted: StepSim
     path: str                     # cold-plan | bandwidth-rescore |
-    #                               straggler-rebalance | neighborhood |
+    #                               straggler-rebalance |
+    #                               straggler-neighborhood | neighborhood |
     #                               full-replan
     wall_time: float
     stats: SearchStats
     cold: bool
+    # switch-cost hysteresis: modeled cost (s) of moving off the incumbent,
+    # and whether the engine kept the incumbent because the projected
+    # savings over the remaining horizon did not cover that cost
+    switch_cost: float = 0.0
+    kept: bool = False
 
 
 def _comm_scale_estimate(sim: StepSim, plan: ParallelPlan,
@@ -315,7 +322,10 @@ class ReplanEngine:
                  n_workers: int | None = None,
                  max_candidates: int | None = None, rescore_top_k: int = 12,
                  rescore_min_sims: int = 4, rescore_stop_margin: float = 1.35,
-                 gpus_per_node: int = 8):
+                 gpus_per_node: int = 8,
+                 reconfig: ReconfigCostModel | None = None,
+                 switch_horizon_s: float | None = None,
+                 straggler_escalate_gap: float = 1.15):
         self.model = model
         self.global_batch = global_batch
         self.seq = seq
@@ -326,6 +336,18 @@ class ReplanEngine:
         self.rescore_min_sims = rescore_min_sims
         self.rescore_stop_margin = rescore_stop_margin
         self.gpus_per_node = gpus_per_node
+        # switch-cost model: every keep/switch decision prices the move off
+        # the incumbent through this (no hard-coded reconfig constants).
+        # ``switch_horizon_s`` is the remaining-horizon budget the projected
+        # savings must amortize the switch over; None means an unbounded
+        # horizon (any strictly-better plan is worth its switch cost).
+        self.reconfig = reconfig if reconfig is not None \
+            else ReconfigCostModel(model)
+        self.switch_horizon_s = switch_horizon_s
+        # straggler path: escalate to the dp/tp/pp neighborhood search when
+        # the local rebalance stays above this factor of the engine's last
+        # (pre-event) predicted step time
+        self.straggler_escalate_gap = straggler_escalate_gap
         self.incumbent: tuple[ParallelPlan, StepSim] | None = None
         self._device_key: tuple | None = None
         # last applied bandwidth factor per event selector, so consecutive
@@ -354,10 +376,58 @@ class ReplanEngine:
             ctx.put_score(plan, sim)
         return sim
 
+    def _keep_or_switch(self, plan: ParallelPlan, sim: StepSim,
+                        topo: ClusterTopology, ctx: _CacheContext | None
+                        ) -> tuple[ParallelPlan, StepSim, float, bool]:
+        """Switch-cost hysteresis: price moving off the incumbent through
+        the :class:`ReconfigCostModel` and keep the incumbent when the
+        projected step-time savings over the remaining horizon do not cover
+        the modeled switch cost.  Returns (plan, sim, switch_cost, kept)."""
+        prev = self.incumbent
+        if prev is None or self.reconfig is None:
+            return plan, sim, 0.0, False
+        prev_plan, _ = prev
+        if plan.structural_key() == prev_plan.structural_key():
+            return plan, sim, 0.0, False
+        # never keep an incumbent naming dead devices: the simulator silently
+        # drops dead TP-group members, so its score would be optimistic while
+        # the plan is actually unrunnable.  The switch is forced, but still
+        # price it (reshard from survivors + store fallback) for telemetry.
+        alive = set(topo.alive_ids())
+        if prev_plan.world > len(alive) or (prev_plan.stages and not
+                                            {d for st in prev_plan.stages
+                                             for d in st.device_ids} <= alive):
+            return plan, sim, self.reconfig.cost(prev_plan, plan,
+                                                 topo).total_s, False
+        prev_sim = self._simulate(prev_plan, topo, ctx)
+        cost = self.reconfig.cost(prev_plan, plan, topo).total_s
+        if prev_sim is None or not math.isfinite(prev_sim.step_time) \
+                or prev_sim.step_time <= 0:
+            # incumbent no longer simulatable: the switch is forced, but
+            # the telemetry still carries what it costs
+            return plan, sim, cost, False
+        if self.switch_horizon_s is None:
+            # unbounded horizon: any strictly-better plan amortizes any
+            # finite cost eventually; equal-or-worse keeps the incumbent
+            switch = sim.step_time < prev_sim.step_time
+        else:
+            # running old for H costs H/old steps; switching yields
+            # (H - c)/new -> switch iff H * (1 - new/old) > c
+            saved = self.switch_horizon_s \
+                * (1.0 - sim.step_time / prev_sim.step_time)
+            switch = saved > cost
+        if switch:
+            return plan, sim, cost, False
+        return prev_plan, prev_sim, cost, True
+
     def _finish(self, plan: ParallelPlan, sim: StepSim, path: str,
                 t0: float, stats: SearchStats, *, cold: bool,
                 topo: ClusterTopology, ctx: _CacheContext | None,
                 refresh_portfolio: bool = False) -> ReplanResult:
+        switch_cost, kept = 0.0, False
+        if not cold:
+            plan, sim, switch_cost, kept = \
+                self._keep_or_switch(plan, sim, topo, ctx)
         self.incumbent = (plan, sim)
         self._device_key = self.cache.fingerprint(topo).device_key
         if refresh_portfolio and ctx is not None:
@@ -379,7 +449,7 @@ class ReplanEngine:
                                       item[0][0].grad_sync, item[0][1]))]
         res = ReplanResult(plan=plan, predicted=sim, path=path,
                            wall_time=time.perf_counter() - t0, stats=stats,
-                           cold=cold)
+                           cold=cold, switch_cost=switch_cost, kept=kept)
         self.history.append(res)
         return res
 
@@ -537,10 +607,42 @@ class ReplanEngine:
                 best = (sim.step_time, rebalanced, sim)
         if best is None:
             return self.plan(topo)
+        # Escalation: the local rebalance keeps dp/tp/pp frozen, which on
+        # strong slowdowns leaves a documented ~11% gap to the oracle.  When
+        # the best local result stays above ``straggler_escalate_gap`` x the
+        # engine's last (pre-event) prediction, revisit dp/tp/pp through the
+        # bounded neighborhood search and race the winner.
+        baseline = self.history[-1].predicted.step_time if self.history \
+            else math.inf
+        path = "straggler-rebalance"
+        if math.isfinite(baseline) \
+                and best[0] > self.straggler_escalate_gap * baseline:
+            neigh = self._neighborhood(len(topo.alive_ids()))
+            if neigh:
+                try:
+                    res = plan_hybrid(
+                        topo, self.model, global_batch=self.global_batch,
+                        seq=self.seq, gpus_per_node=self.gpus_per_node,
+                        n_workers=self.n_workers, with_baseline=False,
+                        max_candidates=self.max_candidates, cache=self.cache,
+                        points=neigh, allow_subset=False,
+                        incumbent_bound=best[0])
+                    ns = res.search_stats or SearchStats()
+                    stats.explored += ns.explored
+                    stats.pruned += ns.pruned
+                    stats.rejected += ns.rejected
+                    if res.predicted.step_time < best[0]:
+                        best = (res.predicted.step_time, res.plan,
+                                res.predicted)
+                        path = "straggler-neighborhood"
+                except RuntimeError:
+                    pass
         stats.cache_hits, stats.cache_misses = ctx.counters()
         stats.wall_time = time.perf_counter() - t0
-        return self._finish(best[1], best[2], "straggler-rebalance", t0,
-                            stats, cold=False, topo=topo, ctx=ctx)
+        return self._finish(best[1], best[2], path, t0,
+                            stats, cold=False, topo=topo, ctx=ctx,
+                            refresh_portfolio=(path ==
+                                               "straggler-neighborhood"))
 
     def _neighborhood(self, n: int) -> list[StrategyPoint]:
         """Strategy points within a factor-2 dp/tp/pp neighborhood of the

@@ -1,0 +1,348 @@
+"""Physically-modeled reconfiguration cost (checkpoint/reshard traffic).
+
+Switching between two :class:`~repro.core.plans.ParallelPlan`\\ s mid-run is
+not free: the runtime checkpoints the train state, tears the mesh down,
+re-materializes the new plan's layout and reshards every parameter/optimizer
+shard onto it (``repro.checkpoint.store.restore`` with the new sharding tree
+— Oobleck's template switch).  The harness and simulator used to charge two
+disagreeing made-up constants for this (2 s vs 5 s); this module prices the
+switch from first principles:
+
+  * :meth:`ReconfigCostModel.checkpoint_bytes` — the full sharded train-state
+    footprint (params at the training dtype + Adam moments) that the
+    checkpoint store's flattened reshard tree carries,
+  * :meth:`ReconfigCostModel.reshard_traffic` — which bytes actually cross
+    the fabric: per (device, layer) shard *signatures* (tp size, tp rank,
+    owned layers) are compared between the old and new layouts; a device
+    whose signature for a layer is unchanged keeps its shard in place, every
+    other destination pulls its shard from the nearest alive old owner —
+    or from the host checkpoint store when no alive peer holds it (post-S3
+    failover),
+  * :meth:`ReconfigCostModel.cost` — prices that traffic over the
+    *post-event* topology's links (per-device serialization: a device's
+    total send+receive time bounds the reshard; disjoint pairs overlap),
+    plus host-store I/O and a fixed teardown/rebuild term.
+
+The model carries a calibration hook (:meth:`calibrate_io` /
+:meth:`calibrate`) fed by the runtime :class:`repro.runtime.trainer.Trainer`'s
+measured checkpoint-restore path, so simulated switch charges track what the
+real restore actually costs on the deployment.
+
+:func:`plan_sequence_dp` is the cross-interval clairvoyant bound built on
+top: given per-interval step times for a candidate plan set and a switch-cost
+function, it chooses the plan *sequence* maximizing completed optimizer
+steps — the true oracle once switches are no longer free (the per-interval
+greedy oracle over-switches and over-pays).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+from .cluster import ClusterTopology
+from .costmodel import transfer_time
+from .opgraph import ModelDesc
+from .plans import ParallelPlan, split_devices, uniform_stages
+
+# ---------------------------------------------------------------------------
+# Cost breakdown
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ReconfigCost:
+    """One plan switch, decomposed.  ``total_s`` is what callers charge."""
+
+    total_s: float
+    checkpoint_bytes: float      # full train-state footprint of the new plan
+    reshard_bytes: float         # bytes moved device-to-device over the fabric
+    store_bytes: float           # bytes with no alive peer source (host store)
+    transfer_s: float            # fabric reshard time on the given topology
+    io_s: float                  # host checkpoint-store read time
+    base_s: float                # fixed teardown / re-jit / rebuild term
+    bottleneck_bw: float         # slowest link the reshard actually used
+
+
+_ZERO = ReconfigCost(total_s=0.0, checkpoint_bytes=0.0, reshard_bytes=0.0,
+                     store_bytes=0.0, transfer_s=0.0, io_s=0.0, base_s=0.0,
+                     bottleneck_bw=math.inf)
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+
+def _plan_stages(plan: ParallelPlan, model: ModelDesc,
+                 topo: ClusterTopology):
+    """The plan's stages, synthesizing the default layout for plans built
+    without explicit stages (templates, hand-written configs) — the same
+    fallback the simulator applies."""
+    if plan.stages:
+        return plan.stages
+    return uniform_stages(model.n_layers, plan.pp,
+                          split_devices(topo, plan.dp, plan.tp, plan.pp))
+
+
+class ReconfigCostModel:
+    """Prices a plan switch from the model/plan sharding and the topology.
+
+    ``opt_bytes_per_param`` covers the Adam moment pair (2x fp32); the
+    optimizer shard is additionally split over DP under ZeRO-1.  ``io_bw``
+    is the host checkpoint-store bandwidth used for bytes with no alive
+    peer source — replace it with a measured value via :meth:`calibrate_io`.
+    ``calibration`` is a global scale trimmed by :meth:`calibrate` against an
+    end-to-end measured switch.
+    """
+
+    def __init__(self, model: ModelDesc, *,
+                 opt_bytes_per_param: float = 8.0,
+                 base_overhead_s: float = 0.25,
+                 io_bw: float = 4e9,
+                 calibration: float = 1.0):
+        self.model = model
+        self.opt_bytes_per_param = opt_bytes_per_param
+        self.base_overhead_s = base_overhead_s
+        self.io_bw = io_bw
+        self.calibration = calibration
+
+    # -- checkpoint footprint --------------------------------------------------
+
+    def bytes_per_param(self) -> float:
+        return self.model.dtype_bytes + self.opt_bytes_per_param
+
+    def checkpoint_bytes(self, plan: ParallelPlan | None = None) -> float:
+        """Total train-state bytes the store's flattened tree carries.  The
+        sharded layout spreads, but does not shrink, this footprint (ZeRO-1
+        shards the moments across DP; every byte still exists once)."""
+        del plan  # the global footprint is plan-independent
+        return float(self.model.total_params()) * self.bytes_per_param()
+
+    # -- layouts ---------------------------------------------------------------
+
+    def _unit_bytes(self, unit: int | str) -> tuple[float, float]:
+        """(param bytes, optimizer bytes) of one reshard unit — a layer, or
+        the tied embedding/head matrix (``"embed"``, owned by stage 0)."""
+        m = self.model
+        if unit == "embed":
+            params = float(m.vocab * m.d_model)
+        else:
+            params = float(m.layer_params(unit))
+        return params * m.dtype_bytes, params * self.opt_bytes_per_param
+
+    def _layout(self, plan: ParallelPlan, topo: ClusterTopology
+                ) -> dict[int, dict[int | str, tuple]]:
+        """device -> unit -> (param frac, opt frac, param sig, opt sig).
+
+        The param signature ``(tp_size, tp_rank)`` identifies *which* slice
+        of the unit the device holds — independent of which other layers
+        share the stage, so a layer-rebalance only moves the layers that
+        actually changed hands.  The optimizer signature additionally pins
+        the ZeRO-1 partition ``(dp_size, dp_rank)``: a device that keeps its
+        TP slice but lands in a different DP group holds the wrong moment
+        slice and must refetch it."""
+        stages = _plan_stages(plan, self.model, topo)
+        dp, tp = plan.dp, plan.tp
+        out: dict[int, dict[int | str, tuple]] = {}
+        for si, st in enumerate(stages):
+            G = st.device_ids
+            if len(G) >= dp * tp:
+                groups = [G[r * tp:(r + 1) * tp] for r in range(dp)]
+            else:                      # degenerate stage: one shared group
+                groups = [G]
+            units: list[int | str] = list(st.layers)
+            if si == 0:
+                units.append("embed")
+            for dp_rank, sub in enumerate(groups):
+                width = max(1, len(sub))
+                for rank, dev in enumerate(sub):
+                    slot = out.setdefault(dev, {})
+                    pf = 1.0 / width
+                    psig = (width, rank)
+                    if plan.zero1 and dp > 1:
+                        of = pf / dp
+                        osig = (width, rank, dp, dp_rank)
+                    else:
+                        of = pf
+                        osig = psig
+                    for u in units:
+                        slot[u] = (pf, of, psig, osig)
+        return out
+
+    # -- reshard traffic -------------------------------------------------------
+
+    def reshard_traffic(self, old: ParallelPlan, new: ParallelPlan,
+                        topo: ClusterTopology
+                        ) -> tuple[dict[tuple[int, int], float], float]:
+        """(pair -> bytes moved peer-to-peer, bytes served by the host store).
+
+        Destinations are the new layout's owners; sources are *alive* old
+        owners of the same unit (nearest by transfer time, deterministic
+        tie-break by device id).  Identical shard signatures move nothing —
+        two structurally identical plans therefore cost zero.
+
+        A stage-less old plan whose default layout no longer fits the
+        (post-failure) topology has no peer sources at all: everything the
+        new layout needs comes from the host checkpoint store.  A new plan
+        whose layout cannot be synthesized is priced as a full store
+        restore."""
+        if old.structural_key() == new.structural_key():
+            return {}, 0.0
+        try:
+            old_map = self._layout(old, topo)
+        except ValueError:
+            old_map = {}
+        try:
+            new_map = self._layout(new, topo)
+        except ValueError:
+            return {}, self.checkpoint_bytes(new)
+        alive = set(topo.alive_ids())
+        # unit -> alive old owners (for source selection)
+        owners: dict[int | str, list[int]] = {}
+        for dev, units in old_map.items():
+            if dev in alive:
+                for u in units:
+                    owners.setdefault(u, []).append(dev)
+        pair_bytes: dict[tuple[int, int], float] = {}
+        store_bytes = 0.0
+        for dev in sorted(new_map):
+            held = old_map.get(dev, {})
+            for u, (pf, of, psig, osig) in sorted(new_map[dev].items(),
+                                                  key=str):
+                pb, ob = self._unit_bytes(u)
+                old_entry = held.get(u)
+                need = 0.0
+                if old_entry is None or old_entry[2] != psig:
+                    need += pf * pb
+                if old_entry is None or old_entry[3] != osig:
+                    need += of * ob
+                if need <= 0.0:
+                    continue
+                srcs = [s for s in owners.get(u, ()) if s != dev]
+                if not srcs:
+                    store_bytes += need
+                    continue
+                src = min(srcs, key=lambda s: (transfer_time(topo, s, dev,
+                                                             need), s))
+                pair_bytes[(src, dev)] = pair_bytes.get((src, dev), 0.0) + need
+        return pair_bytes, store_bytes
+
+    # -- pricing ---------------------------------------------------------------
+
+    @staticmethod
+    def _path_time(topo: ClusterTopology, a: int, b: int,
+                   size: float) -> tuple[float, float]:
+        """(seconds, bandwidth) for one transfer; pairs without a direct
+        link route over the cluster's bottleneck (same fallback as the
+        collective model)."""
+        t = transfer_time(topo, a, b, size)
+        if math.isfinite(t):
+            link = topo.link(a, b)
+            bw = max(e.effective_bandwidth for e in link.edges) if link else 0.0
+            return t, bw
+        bw = max(topo.min_link_bandwidth(), 1e-9)
+        return 5e-6 + size / bw, bw
+
+    def cost(self, old: ParallelPlan, new: ParallelPlan,
+             topo: ClusterTopology) -> ReconfigCost:
+        """Price switching ``old -> new`` on (post-event) ``topo``."""
+        if old.structural_key() == new.structural_key():
+            return _ZERO
+        pair_bytes, store_bytes = self.reshard_traffic(old, new, topo)
+        per_dev: dict[int, float] = {}
+        bottleneck = math.inf
+        for (src, dst), nbytes in sorted(pair_bytes.items()):
+            t, bw = self._path_time(topo, src, dst, nbytes)
+            per_dev[src] = per_dev.get(src, 0.0) + t
+            per_dev[dst] = per_dev.get(dst, 0.0) + t
+            bottleneck = min(bottleneck, bw)
+        transfer_s = max(per_dev.values(), default=0.0)
+        io_s = store_bytes / self.io_bw if self.io_bw > 0 else 0.0
+        total = self.calibration * (self.base_overhead_s + transfer_s + io_s)
+        return ReconfigCost(
+            total_s=total,
+            checkpoint_bytes=self.checkpoint_bytes(new),
+            reshard_bytes=sum(pair_bytes.values()),
+            store_bytes=store_bytes, transfer_s=transfer_s, io_s=io_s,
+            base_s=self.base_overhead_s, bottleneck_bw=bottleneck)
+
+    def switch_seconds(self, old: ParallelPlan, new: ParallelPlan,
+                       topo: ClusterTopology) -> float:
+        return self.cost(old, new, topo).total_s
+
+    # -- calibration hooks -----------------------------------------------------
+
+    def calibrate_io(self, measured_s: float, nbytes: float) -> float:
+        """Fold a measured checkpoint-restore (``nbytes`` restored in
+        ``measured_s`` seconds) into the host-store bandwidth.  Returns the
+        new ``io_bw``.  The runtime trainer calls this after every elastic
+        restore, so simulated post-failover charges track the deployment."""
+        if measured_s > 0 and nbytes > 0:
+            self.io_bw = nbytes / measured_s
+        return self.io_bw
+
+    def calibrate(self, measured_total_s: float, old: ParallelPlan,
+                  new: ParallelPlan, topo: ClusterTopology) -> float:
+        """Scale the whole model so its prediction for an observed switch
+        matches the end-to-end measurement.  Returns the new scale."""
+        predicted = self.cost(old, new, topo).total_s
+        if predicted > 0 and measured_total_s > 0:
+            self.calibration *= measured_total_s / predicted
+        return self.calibration
+
+
+# ---------------------------------------------------------------------------
+# Cross-interval DP oracle
+# ---------------------------------------------------------------------------
+
+
+def plan_sequence_dp(durations: Sequence[float],
+                     step_times: Sequence[Sequence[float]],
+                     switch_cost: Callable[[int, int, int], float]
+                     ) -> tuple[float, list[int]]:
+    """Clairvoyant plan schedule over consecutive intervals, switch costs
+    included — the true oracle bound the per-interval greedy replay is not.
+
+    ``durations[i]`` is interval *i*'s length in seconds; ``step_times[i][c]``
+    the simulated step time of candidate plan *c* during interval *i*
+    (``inf`` = infeasible); ``switch_cost(i, prev, cur)`` the seconds charged
+    at interval *i*'s start for arriving on plan ``cur`` from ``prev``
+    (called only when ``prev != cur``).  The initial plan is free — the
+    clairvoyant picks its starting layout before training begins.
+
+    Returns ``(steps, choices)`` maximizing total completed optimizer steps
+    ``sum_i max(0, d_i - oh_i) / s_i``.  O(intervals * candidates^2).
+    """
+    B = len(durations)
+    if B == 0 or not step_times or not step_times[0]:
+        return 0.0, []
+    C = len(step_times[0])
+
+    def gain(d: float, oh: float, s: float) -> float:
+        if not math.isfinite(s) or s <= 0:
+            return 0.0
+        return max(0.0, d - oh) / s
+
+    best = [[-math.inf] * C for _ in range(B)]
+    back = [[0] * C for _ in range(B)]
+    for c in range(C):
+        best[0][c] = gain(durations[0], 0.0, step_times[0][c])
+    for i in range(1, B):
+        for c in range(C):
+            for q in range(C):
+                if best[i - 1][q] == -math.inf:
+                    continue
+                oh = 0.0 if q == c else switch_cost(i, q, c)
+                val = best[i - 1][q] + gain(durations[i], oh,
+                                            step_times[i][c])
+                if val > best[i][c]:
+                    best[i][c] = val
+                    back[i][c] = q
+    end = max(range(C), key=lambda c: best[B - 1][c])
+    choices = [end]
+    for i in range(B - 1, 0, -1):
+        choices.append(back[i][choices[-1]])
+    choices.reverse()
+    return best[B - 1][end], choices

@@ -424,21 +424,29 @@ class EpochSim:
     steps: int
     step_times: list[float]
     replans: int = 0
+    reconfig_s: float = 0.0      # total modeled plan-switch cost charged
 
 
 def simulate_epoch(plan: ParallelPlan, model: ModelDesc, topo: ClusterTopology,
                    *, global_batch: int, seq: int, steps: int,
                    replan_fn: Callable[[ClusterTopology, float],
                                        ParallelPlan] | None = None,
-                   replan_overhead: float = 5.0) -> EpochSim:
+                   reconfig: "object | None" = None) -> EpochSim:
     """Simulate ``steps`` optimizer steps over the temporal topology.
 
     Events fire between steps; if ``replan_fn`` is given, topology changes
-    trigger re-planning (charged ``replan_overhead`` seconds — checkpoint
-    reload + reshard, cf. Oobleck/ReCycle discussion §2.2.2)."""
+    trigger re-planning.  A re-plan that actually *switches* plans is charged
+    the physically-modeled checkpoint/reshard cost (checkpoint bytes,
+    reshard traffic, post-event bandwidths) through ``reconfig`` — a
+    :class:`repro.core.reconfig.ReconfigCostModel`, built from ``model``
+    when not supplied.  Re-plans that keep the incumbent cost nothing."""
+    from .reconfig import ReconfigCostModel
+    if reconfig is None:
+        reconfig = ReconfigCostModel(model)
     t = 0.0
     times: list[float] = []
     replans = 0
+    reconfig_s = 0.0
     current = plan
     pending = sorted(topo.events, key=lambda e: e.time)
     ei = 0
@@ -449,8 +457,13 @@ def simulate_epoch(plan: ParallelPlan, model: ModelDesc, topo: ClusterTopology,
             fired = True
             ei += 1
         if fired and replan_fn is not None:
-            current = replan_fn(topo.snapshot(t), t)
-            t += replan_overhead
+            snap = topo.snapshot(t)
+            new = replan_fn(snap, t)
+            if new.structural_key() != current.structural_key():
+                charge = reconfig.cost(current, new, snap).total_s
+                t += charge
+                reconfig_s += charge
+            current = new
             replans += 1
         sim = simulate_training_step(current, model, topo,
                                      global_batch=global_batch, seq=seq,
@@ -458,4 +471,4 @@ def simulate_epoch(plan: ParallelPlan, model: ModelDesc, topo: ClusterTopology,
         times.append(sim.step_time)
         t += sim.step_time
     return EpochSim(total_time=t, steps=steps, step_times=times,
-                    replans=replans)
+                    replans=replans, reconfig_s=reconfig_s)

@@ -103,6 +103,8 @@ class Trainer:
         self.saver = AsyncSaver()
         self.history: list[dict] = []
         self.replans = 0
+        self._start_step = 0
+        self._hist_mark = 0
         self._orch = None
         self._engine = None
         if topo is not None:
@@ -195,6 +197,16 @@ class Trainer:
                           plan_json=self.plan.to_json() if self.plan else "")
         self.saver.wait()
         self.topo.apply_event(ev)
+        if self._engine is not None and len(self.history) > self._hist_mark:
+            # remaining-horizon budget for the engine's switch-cost
+            # hysteresis: steps left x the measured mean step wall time.
+            # Only entries logged by *this* run() invocation qualify: their
+            # wall is measured from this run's t0 and covers the steps since
+            # start_step (a previous run's entries would mix timebases)
+            m = self.history[-1]
+            done = max(m["step"] - self._start_step + 1, 1)
+            self._engine.switch_horizon_s = \
+                (self.cfg.steps - step) * m["wall"] / done
         old_plan = self.plan or ParallelPlan()
         self.plan = self._orch.adapt(old_plan, self.topo, ev)
         self.replans += 1
@@ -204,7 +216,17 @@ class Trainer:
         self._build(self.mesh)
         like = init_train_state(self.model,
                                 jax.random.PRNGKey(self.cfg.seed))
+        t0 = time.perf_counter()
         restored, _ = restore(ck, like, shardings=self.state_sh)
+        restore_s = time.perf_counter() - t0
+        if self._engine is not None:
+            # calibration hook: fold the measured checkpoint-restore path
+            # into the reconfiguration cost model, so simulated switch
+            # charges track what elastic restore costs on this deployment
+            nbytes = sum(
+                getattr(leaf, "nbytes", 0)
+                for leaf in jax.tree_util.tree_leaves(restored))
+            self._engine.reconfig.calibrate_io(restore_s, float(nbytes))
         return restored
 
     # -- main loop -------------------------------------------------------------
@@ -213,6 +235,8 @@ class Trainer:
             start_step: int = 0) -> tuple[Pytree, list[dict]]:
         cfg = self.cfg
         state = state if state is not None else self.init_state()
+        self._start_step = start_step
+        self._hist_mark = len(self.history)
         ev_i = 0
         t0 = time.perf_counter()
         for step in range(start_step, cfg.steps):

@@ -9,16 +9,18 @@ claim — paper §2.2 dynamic scenarios, §4 parallel simulation).
     ``record``/``load`` round-trip,
   * :mod:`repro.scenarios.catalog` — the named scenario registry,
   * :mod:`repro.scenarios.harness` — replay through the simulator +
-    ``ReplanEngine`` with static/adapted/oracle policies, process-parallel
-    across scenarios.
+    ``ReplanEngine`` with static/adapted/greedy-oracle/DP-oracle policies
+    (switch costs modeled via ``repro.core.ReconfigCostModel``),
+    process-parallel across scenarios, multi-seed mean/CI sweeps.
 """
 
 from .catalog import (ScenarioSpec, build, build_trace, get_scenario,
                       list_scenarios, register)
 from .generators import (congestion_bursts, diurnal_bandwidth,
                          link_degradation, spot_preemptions, straggler_churn)
-from .harness import (HarnessConfig, PolicyResult, ScenarioHarness,
-                      ScenarioReport, run_scenario)
+from .harness import (FamilySummary, HarnessConfig, PolicyResult,
+                      ScenarioHarness, ScenarioReport, run_payloads,
+                      run_scenario, summarize_reports)
 from .trace import TRACE_FORMAT, TRACE_VERSION, Trace
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -21,7 +21,21 @@ straggler_churn       devices degrade and recover on a heterogeneous node
 cross_region          cross-region DCI link flaps between two TPU pods (S1)
 fig6c_dynamic_bw      the fig6c benchmark timeline re-expressed as a trace:
                       nominal -> 0.2x -> 4x fabric bandwidth (deterministic)
+diurnal_wan_crossover deep diurnal trough on the ``ib`` fabric joining two
+                      NVLink islands — crosses the fig6c TP-vs-bandwidth
+                      boundary, so the plan actually flips mid-trace (S1)
+congested_crossover   deep multi-tenant bursts on the same ``ib`` fabric;
+                      burst floors cross the DP-across-nodes vs
+                      PP-across-nodes boundary (S1)
 ===================== ======================================================
+
+The ``*_crossover`` variants exist because the original bandwidth families
+ended in "keep" on every event: the cold plan stays bandwidth-robust on
+their fabrics at any swing the generators produce.  With fast NVLink
+islands and only the inter-island ``ib`` link swinging, the crossover is
+inside the swing range — at a comm-heavy replay scale (small global batch)
+a deep trough flips DP-across-nodes to PP-across-nodes and the adapted
+policy has a real S1 win to collect.
 """
 
 from __future__ import annotations
@@ -148,6 +162,39 @@ register(ScenarioSpec(
         rng, horizon, selector="dci", rate=4.0 / horizon,
         severity_range=(0.1, 0.5), repair_mean=horizon / 6),
     tags=("S1", "bandwidth", "dci"),
+))
+
+
+def _crossover_fabric() -> ClusterTopology:
+    """Two NVLink-backed 4-GPU V100 boxes joined by a 25 GB/s WAN-class
+    ``ib`` fabric.  With the intra-node fabric fast and only ``ib``
+    swinging, the fig6c crossover sits inside the swing: at nominal
+    bandwidth DP-across-nodes wins, in a deep trough the planner flips to
+    pipeline-across-nodes (drops the cross-``ib`` gradient sync).  Replay
+    this family at a comm-heavy scale (small global batch) — at large
+    batches the step is compute-bound and no bandwidth level flips it."""
+    return hetero_cluster({"V100": 8}, inter_bw=25e9, gpus_per_node=4)
+
+
+register(ScenarioSpec(
+    name="diurnal_wan_crossover",
+    description="deep diurnal WAN swing across NVLink islands (S1)",
+    make_topology=_crossover_fabric,
+    make_events=lambda rng, horizon: gen.diurnal_bandwidth(
+        rng, horizon, period=horizon / 2, floor=0.10, selector="ib",
+        samples_per_period=7),
+    tags=("S1", "bandwidth", "crossover"),
+))
+
+register(ScenarioSpec(
+    name="congested_crossover",
+    description="deep multi-tenant bursts across NVLink islands (S1)",
+    make_topology=_crossover_fabric,
+    make_events=lambda rng, horizon: gen.congestion_bursts(
+        rng, horizon, burst_rate=5.0 / horizon, selector="ib",
+        depth_range=(0.6, 0.9),
+        duration_range=(horizon / 10, horizon / 4), decay_steps=2),
+    tags=("S1", "bandwidth", "scale", "crossover"),
 ))
 
 

@@ -8,20 +8,26 @@ per-scenario adaptation metrics:
     no dynamic awareness delivers; after a failure it may be infeasible,
     contributing zero throughput for that interval),
   * ``adapted`` — every event flows through ``DynamicOrchestrator.adapt``;
-    measured re-plan latency plus a fixed reconfiguration overhead is
-    charged against the throughput budget on every plan switch,
-  * ``oracle``  — a clairvoyant baseline: a fresh full search on every
-    interval's topology with zero re-plan cost (the adaptability headroom).
+    measured re-plan latency plus the *physically modeled* reconfiguration
+    cost (checkpoint/reshard traffic priced on the post-event topology via
+    :class:`repro.core.ReconfigCostModel`) is charged against the throughput
+    budget on every plan switch.  The engine's keep/switch hysteresis sees
+    the remaining horizon, so it only switches when the modeled savings
+    amortize the modeled cost,
+  * ``oracle``  — the clairvoyant *greedy* baseline: a fresh full search on
+    every interval's topology, now charged the same modeled switch cost when
+    its per-interval winners differ,
+  * ``oracle_dp`` — the true clairvoyant bound: a cross-interval dynamic
+    program (:func:`repro.core.plan_sequence_dp`) over the candidate plans
+    (per-interval winners + the adapted policy's plans), switch costs
+    included.  Never worse than the greedy oracle.
 
 Step-time timelines are derived per inter-event interval; throughput is the
 time-weighted number of optimizer steps completed inside the horizon.
 
 :meth:`ScenarioHarness.run_many` evaluates several scenarios at once, either
-sequentially or **process-parallel** — the paper accelerates its search
-"through parallel execution within the simulator"; this applies the same
-strategy one level up, across scenarios (the planner's per-candidate
-``ThreadPoolExecutor`` stays GIL-bound, so scenario-level parallelism needs
-processes).  ``repro.core`` is dependency-free, so worker start-up is cheap.
+sequentially or **process-parallel**; :meth:`ScenarioHarness.run_sweep` runs
+multi-seed sweeps and aggregates mean / 95% CI per scenario family.
 """
 
 from __future__ import annotations
@@ -30,14 +36,16 @@ import itertools
 import math
 import multiprocessing
 import os
+import statistics
 import time
 from concurrent.futures import ProcessPoolExecutor
-from dataclasses import dataclass, field
+from dataclasses import dataclass, replace
 from typing import Sequence
 
 from repro.core import (ClusterTopology, DynamicOrchestrator, ModelDesc,
-                        NetworkEvent, ParallelPlan, ReplanEngine,
-                        StrategyCache, simulate_training_step)
+                        NetworkEvent, ParallelPlan, ReconfigCostModel,
+                        ReplanEngine, StrategyCache, plan_sequence_dp,
+                        simulate_training_step)
 
 from . import catalog
 from .trace import Trace
@@ -58,11 +66,13 @@ class HarnessConfig:
     seq: int
     max_candidates: int | None = None
     n_workers: int | None = None
-    # seconds charged per *plan switch*: checkpoint reload + reshard
-    # (cf. the Oobleck/ReCycle reconfiguration-cost discussion, paper §2.2.2)
-    reconfig_overhead: float = 2.0
+    # switch-cost model: checkpoint/reshard traffic priced on the post-event
+    # topology (cf. the Oobleck/ReCycle reconfiguration-cost discussion,
+    # paper §2.2.2).  None builds the default model from ``model``.
+    # (the legacy replan_threshold knob is gone: with a finite
+    # switch-horizon the engine's cost-model hysteresis decides keep/switch)
+    reconfig: ReconfigCostModel | None = None
     oracle: bool = True
-    replan_threshold: float = 1.10
 
 
 @dataclass(frozen=True)
@@ -84,10 +94,12 @@ class ScenarioReport:
     horizon: float
     static: PolicyResult
     adapted: PolicyResult
-    oracle: PolicyResult | None
+    oracle: PolicyResult | None              # greedy clairvoyant (costed)
+    oracle_dp: PolicyResult | None           # DP clairvoyant bound (costed)
     adaptations: int                         # events processed
     replans: int                             # actual plan switches
     actions: tuple[tuple[str, int], ...]     # replan-path histogram
+    switch_cost_s: float                     # modeled switch cost charged
     replan_latency_mean_ms: float
     replan_latency_max_ms: float
     wall_s: float
@@ -102,6 +114,20 @@ class ScenarioReport:
             return float("nan")
         return _ratio(self.adapted.avg_step, self.oracle.avg_step)
 
+    @property
+    def adapted_over_oracle_dp(self) -> float:
+        if self.oracle_dp is None:
+            return float("nan")
+        return _ratio(self.adapted.avg_step, self.oracle_dp.avg_step)
+
+    @property
+    def greedy_over_dp(self) -> float:
+        """Greedy-oracle avg step over DP-oracle avg step (>= 1: the DP
+        schedule is the tighter clairvoyant bound)."""
+        if self.oracle is None or self.oracle_dp is None:
+            return float("nan")
+        return _ratio(self.oracle.avg_step, self.oracle_dp.avg_step)
+
     def to_row(self) -> dict:
         row = {
             "scenario": self.scenario, "seed": self.seed,
@@ -110,9 +136,14 @@ class ScenarioReport:
             "adapted_step_s": _round(self.adapted.avg_step),
             "oracle_step_s": _round(self.oracle.avg_step)
             if self.oracle else None,
+            "oracle_dp_step_s": _round(self.oracle_dp.avg_step)
+            if self.oracle_dp else None,
             "adapted_over_static": _round(self.adapted_over_static),
             "adapted_over_oracle": _round(self.adapted_over_oracle),
+            "adapted_over_oracle_dp": _round(self.adapted_over_oracle_dp),
+            "greedy_over_dp": _round(self.greedy_over_dp),
             "replans": self.replans,
+            "switch_cost_s": _round(self.switch_cost_s),
             "actions": "|".join(f"{k}:{v}" for k, v in self.actions),
             "replan_ms_mean": round(self.replan_latency_mean_ms, 1),
             "replan_ms_max": round(self.replan_latency_max_ms, 1),
@@ -171,10 +202,97 @@ def _aggregate(name: str, segs: Sequence[tuple[float, float, float]],
                         timeline=tuple((t, _round(s)) for t, s, _ in segs))
 
 
+def _oracle_policies(cfg: HarnessConfig, topo: ClusterTopology,
+                     boundaries: list[float], horizon: float,
+                     reconfig: ReconfigCostModel,
+                     extra_plans: Sequence[ParallelPlan]
+                     ) -> tuple[PolicyResult, PolicyResult]:
+    """(greedy oracle, DP oracle) — both clairvoyant, both charged the
+    modeled switch cost.
+
+    Greedy re-plans from scratch per interval and pays whenever consecutive
+    winners differ.  The DP oracle chooses the best plan *sequence* over the
+    candidate set (per-interval winners + ``extra_plans``) via
+    :func:`plan_sequence_dp`; when the carry-over of a switch cost across an
+    interval boundary makes the DP's carry-free objective mis-rank, the
+    greedy sequence (a member of the DP's search space) is taken instead —
+    so the DP oracle is never worse than the greedy one.
+    """
+    engine = ReplanEngine(cfg.model, global_batch=cfg.global_batch,
+                          seq=cfg.seq, cache=StrategyCache(),
+                          max_candidates=cfg.max_candidates,
+                          n_workers=cfg.n_workers, reconfig=reconfig)
+    snaps = [topo.snapshot(t) for t in boundaries]
+    winners: list[ParallelPlan | None] = []
+    for snap in snaps:
+        try:
+            winners.append(engine.plan(snap).plan)
+        except RuntimeError:
+            winners.append(None)
+
+    # candidate set: per-interval winners + the adapted policy's plans
+    cands: list[ParallelPlan] = []
+    cand_idx: dict = {}
+    for p in [*winners, *extra_plans]:
+        if p is not None and p.structural_key() not in cand_idx:
+            cand_idx[p.structural_key()] = len(cands)
+            cands.append(p)
+    if not cands:                      # every interval infeasible
+        segs = [(t, math.inf, 0.0) for t in boundaries]
+        return (_aggregate("oracle", segs, horizon),
+                _aggregate("oracle_dp", segs, horizon))
+
+    # step-time grid through the engine's score cache: one batched
+    # score_plans per boundary; same-fingerprint boundaries hit the cache
+    st = []
+    for snap in snaps:
+        sims = engine.score_plans(cands, snap)
+        st.append([s.step_time if s is not None else math.inf
+                   for s in sims])
+
+    def seq_segs(idxs: Sequence[int | None]
+                 ) -> list[tuple[float, float, float]]:
+        segs = []
+        prev: int | None = None
+        for i, (t, c) in enumerate(zip(boundaries, idxs)):
+            if c is None:
+                segs.append((t, math.inf, 0.0))
+                continue
+            oh = switch_cost(i, prev, c) if i and prev is not None \
+                and prev != c else 0.0
+            segs.append((t, st[i][c], oh))
+            prev = c
+        return segs
+
+    durations = [t1 - t0 for t0, t1 in
+                 zip(boundaries, boundaries[1:] + [horizon])]
+    cost_memo: dict[tuple[int, int, int], float] = {}
+
+    def switch_cost(i: int, q: int, c: int) -> float:
+        key = (i, q, c)
+        if key not in cost_memo:
+            cost_memo[key] = reconfig.cost(cands[q], cands[c],
+                                           snaps[i]).total_s
+        return cost_memo[key]
+
+    winner_idxs = [cand_idx[p.structural_key()] if p is not None else None
+                   for p in winners]
+    greedy = _aggregate("oracle", seq_segs(winner_idxs), horizon)
+    _, choices = plan_sequence_dp(durations, st, switch_cost)
+    dp = _aggregate("oracle_dp", seq_segs(choices), horizon)
+    # the DP objective is carry-free while _aggregate carries overhead
+    # across short intervals; when that mis-ranks, the greedy sequence (a
+    # member of the DP search space) is the DP result — compare on the
+    # *unrounded* avg_step so the invariant dp <= greedy holds exactly
+    if not (dp.avg_step <= greedy.avg_step):
+        dp = replace(greedy, name="oracle_dp")
+    return greedy, dp
+
+
 def run_scenario(cfg: HarnessConfig, scenario: str | Trace, seed: int = 0,
                  topo: ClusterTopology | None = None) -> ScenarioReport:
     """Replay one scenario end-to-end; see the module docstring for the
-    three policies.  ``scenario`` is a catalog name (the topology comes from
+    four policies.  ``scenario`` is a catalog name (the topology comes from
     the spec) or an explicit :class:`Trace` (then ``topo`` is required)."""
     wall0 = time.perf_counter()
     if isinstance(scenario, Trace):
@@ -196,13 +314,15 @@ def run_scenario(cfg: HarnessConfig, scenario: str | Trace, seed: int = 0,
     # defaults the horizon to the *last* event's time, which must not vanish
     boundaries = [0.0] + [t for t in trace.event_times() if 0.0 < t <= horizon]
 
+    reconfig = cfg.reconfig if cfg.reconfig is not None \
+        else ReconfigCostModel(cfg.model)
     engine = ReplanEngine(cfg.model, global_batch=cfg.global_batch,
                           seq=cfg.seq, cache=StrategyCache(),
                           max_candidates=cfg.max_candidates,
-                          n_workers=cfg.n_workers)
+                          n_workers=cfg.n_workers, reconfig=reconfig,
+                          switch_horizon_s=horizon)
     orch = DynamicOrchestrator(model=cfg.model, global_batch=cfg.global_batch,
-                               seq=cfg.seq, engine=engine,
-                               replan_threshold=cfg.replan_threshold)
+                               seq=cfg.seq, engine=engine)
     cold = engine.plan(topo.snapshot(0.0))
     plan0 = cold.plan
 
@@ -214,13 +334,17 @@ def run_scenario(cfg: HarnessConfig, scenario: str | Trace, seed: int = 0,
     plan = plan0
     adapted_segs: list[tuple[float, float, float]] = \
         [(0.0, _step_time(plan0, cfg, topo, 0.0), 0.0)]
+    adapted_plans: list[ParallelPlan] = [plan0]
     latencies: list[float] = []
     replans = 0
+    switch_cost_total = 0.0
     grouped = [(t, list(evs)) for t, evs in
                itertools.groupby(trace.events, key=lambda e: e.time)
                if 0.0 < t <= horizon]
     for t, evs in grouped:
         overhead = 0.0
+        # the hysteresis amortizes switch cost over what is actually left
+        engine.switch_horizon_s = max(horizon - t, 0.0)
         for ev in evs:
             t0 = time.perf_counter()
             new_plan = orch.adapt(plan, topo, ev)
@@ -228,27 +352,27 @@ def run_scenario(cfg: HarnessConfig, scenario: str | Trace, seed: int = 0,
             latencies.append(lat)
             if new_plan.structural_key() != plan.structural_key():
                 replans += 1
-                overhead += lat + cfg.reconfig_overhead
+                # the engine priced this exact switch inside its hysteresis
+                # (same incumbent, same snapshot); a structural switch costs
+                # at least the base term, so 0.0 means the engine's cold
+                # fallback skipped pricing — compute it here then
+                cost = orch.history[-1].switch_cost if orch.history else 0.0
+                if cost <= 0.0:
+                    cost = reconfig.cost(plan, new_plan,
+                                         topo.snapshot(t)).total_s
+                switch_cost_total += cost
+                overhead += lat + cost
+                adapted_plans.append(new_plan)
             else:
                 overhead += lat
             plan = new_plan
         adapted_segs.append((t, _step_time(plan, cfg, topo, t), overhead))
 
-    # -- oracle: clairvoyant full re-plan per interval, zero cost -----------
-    oracle_res = None
+    # -- oracles: clairvoyant greedy + cross-interval DP bound --------------
+    oracle_res = oracle_dp_res = None
     if cfg.oracle:
-        oracle_engine = ReplanEngine(cfg.model, global_batch=cfg.global_batch,
-                                     seq=cfg.seq, cache=StrategyCache(),
-                                     max_candidates=cfg.max_candidates,
-                                     n_workers=cfg.n_workers)
-        oracle_segs = []
-        for t in boundaries:
-            try:
-                r = oracle_engine.plan(topo.snapshot(t))
-                oracle_segs.append((t, r.predicted.step_time, 0.0))
-            except RuntimeError:
-                oracle_segs.append((t, math.inf, 0.0))
-        oracle_res = _aggregate("oracle", oracle_segs, horizon)
+        oracle_res, oracle_dp_res = _oracle_policies(
+            cfg, topo, boundaries, horizon, reconfig, adapted_plans)
 
     actions: dict[str, int] = {}
     for rec in orch.history:
@@ -260,9 +384,10 @@ def run_scenario(cfg: HarnessConfig, scenario: str | Trace, seed: int = 0,
         horizon=horizon,
         static=_aggregate("static", static_segs, horizon),
         adapted=_aggregate("adapted", adapted_segs, horizon),
-        oracle=oracle_res,
+        oracle=oracle_res, oracle_dp=oracle_dp_res,
         adaptations=len(orch.history), replans=replans,
         actions=tuple(sorted(actions.items())),
+        switch_cost_s=switch_cost_total,
         replan_latency_mean_ms=1e3 * (sum(latencies) / len(latencies))
         if latencies else 0.0,
         replan_latency_max_ms=1e3 * max(latencies, default=0.0),
@@ -272,6 +397,110 @@ def run_scenario(cfg: HarnessConfig, scenario: str | Trace, seed: int = 0,
 def _worker(payload: tuple[HarnessConfig, str, int]) -> ScenarioReport:
     cfg, name, seed = payload
     return run_scenario(cfg, name, seed)
+
+
+def run_payloads(payloads: Sequence[tuple[HarnessConfig, str, int]], *,
+                 parallel: bool = False,
+                 max_workers: int | None = None) -> list[ScenarioReport]:
+    """Replay explicit (config, scenario, seed) payloads, sequentially or
+    process-parallel (results keep input order).  Payloads may mix harness
+    configurations — e.g. the bandwidth-crossover families replay at a
+    comm-heavy scale while the rest use the default one."""
+    if not parallel or len(payloads) <= 1:
+        return [_worker(p) for p in payloads]
+    workers = max_workers or min(len(payloads), os.cpu_count() or 1)
+    # spawn, not fork: the caller may be multi-threaded (planner thread
+    # pools, JAX) and fork()ing a threaded parent risks deadlocked
+    # children; workers only import dependency-free repro.core, so a
+    # fresh interpreter starts in well under a second
+    ctx = multiprocessing.get_context("spawn")
+    with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as ex:
+        return list(ex.map(_worker, payloads))
+
+
+# ---------------------------------------------------------------------------
+# Multi-seed aggregation
+# ---------------------------------------------------------------------------
+
+
+# two-sided 95% Student-t quantiles by degrees of freedom; the normal 1.96
+# would understate the interval ~6.5x at the n=2 sweeps the bench runs
+_T95 = {1: 12.706, 2: 4.303, 3: 3.182, 4: 2.776, 5: 2.571, 6: 2.447,
+        7: 2.365, 8: 2.306, 9: 2.262, 10: 2.228, 15: 2.131, 20: 2.086,
+        30: 2.042}
+
+
+def _t95(df: int) -> float:
+    if df <= 0:
+        return float("nan")
+    usable = [d for d in _T95 if d <= df]
+    return _T95[max(usable)] if usable else 1.96
+
+
+def _mean_ci(xs: Sequence[float]) -> tuple[float, float]:
+    """(mean, Student-t 95% CI half-width) over the finite values; NaNs
+    if none."""
+    vals = [x for x in xs if math.isfinite(x)]
+    if not vals:
+        return float("nan"), float("nan")
+    mean = sum(vals) / len(vals)
+    if len(vals) < 2:
+        return mean, 0.0
+    return mean, _t95(len(vals) - 1) * statistics.stdev(vals) \
+        / math.sqrt(len(vals))
+
+
+@dataclass(frozen=True)
+class FamilySummary:
+    """Mean / 95% CI across the seeds of one scenario family."""
+
+    scenario: str
+    n: int
+    seeds: tuple[int, ...]
+    adapted_over_static: tuple[float, float]       # (mean, ci95)
+    adapted_over_oracle_dp: tuple[float, float]
+    greedy_over_dp: tuple[float, float]
+    replans_mean: float
+    switch_cost_s_mean: float
+
+    def to_row(self) -> dict:
+        aos, aod, god = (self.adapted_over_static,
+                         self.adapted_over_oracle_dp, self.greedy_over_dp)
+        return {
+            "scenario": self.scenario,
+            "seeds": "|".join(str(s) for s in self.seeds),
+            "n": self.n,
+            "adapted_over_static_mean": _round(aos[0]),
+            "adapted_over_static_ci95": _round(aos[1]),
+            "adapted_over_oracle_dp_mean": _round(aod[0]),
+            "adapted_over_oracle_dp_ci95": _round(aod[1]),
+            "greedy_over_dp_mean": _round(god[0]),
+            "replans_mean": _round(self.replans_mean, 2),
+            "switch_cost_s_mean": _round(self.switch_cost_s_mean, 2),
+        }
+
+
+def summarize_reports(reports: Sequence[ScenarioReport]
+                      ) -> list[FamilySummary]:
+    """Aggregate per-(family, seed) reports into per-family mean/CI rows,
+    in first-appearance order."""
+    by_family: dict[str, list[ScenarioReport]] = {}
+    for r in reports:
+        by_family.setdefault(r.scenario, []).append(r)
+    out = []
+    for name, reps in by_family.items():
+        out.append(FamilySummary(
+            scenario=name, n=len(reps),
+            seeds=tuple(r.seed for r in reps),
+            adapted_over_static=_mean_ci(
+                [r.adapted_over_static for r in reps]),
+            adapted_over_oracle_dp=_mean_ci(
+                [r.adapted_over_oracle_dp for r in reps]),
+            greedy_over_dp=_mean_ci([r.greedy_over_dp for r in reps]),
+            replans_mean=sum(r.replans for r in reps) / len(reps),
+            switch_cost_s_mean=sum(r.switch_cost_s for r in reps)
+            / len(reps)))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -286,18 +515,18 @@ class ScenarioHarness:
     >>> rep = h.run("cloud_spot", seed=1)
     >>> reps = h.run_many([("cloud_spot", 0), ("diurnal_wan", 0)],
     ...                   parallel=True)
+    >>> reps, fams = h.run_sweep(["cloud_spot"], seeds=(0, 1, 2))
     """
 
     def __init__(self, model: ModelDesc, *, global_batch: int, seq: int,
                  max_candidates: int | None = None,
                  n_workers: int | None = None,
-                 reconfig_overhead: float = 2.0, oracle: bool = True,
-                 replan_threshold: float = 1.10):
+                 reconfig: ReconfigCostModel | None = None,
+                 oracle: bool = True):
         self.cfg = HarnessConfig(
             model=model, global_batch=global_batch, seq=seq,
             max_candidates=max_candidates, n_workers=n_workers,
-            reconfig_overhead=reconfig_overhead, oracle=oracle,
-            replan_threshold=replan_threshold)
+            reconfig=reconfig, oracle=oracle)
 
     def run(self, scenario: str | Trace, seed: int = 0,
             topo: ClusterTopology | None = None) -> ScenarioReport:
@@ -312,13 +541,18 @@ class ScenarioHarness:
         norm: list[tuple[str, int]] = [
             it if isinstance(it, tuple) else (it, 0) for it in items]
         payloads = [(self.cfg, name, seed) for name, seed in norm]
-        if not parallel or len(payloads) <= 1:
-            return [_worker(p) for p in payloads]
-        workers = max_workers or min(len(payloads), os.cpu_count() or 1)
-        # spawn, not fork: the caller may be multi-threaded (planner thread
-        # pools, JAX) and fork()ing a threaded parent risks deadlocked
-        # children; workers only import dependency-free repro.core, so a
-        # fresh interpreter starts in well under a second
-        ctx = multiprocessing.get_context("spawn")
-        with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as ex:
-            return list(ex.map(_worker, payloads))
+        return run_payloads(payloads, parallel=parallel,
+                            max_workers=max_workers)
+
+    def run_sweep(self, families: Sequence[str] | None = None, *,
+                  seeds: Sequence[int] = (0, 1, 2),
+                  parallel: bool = False, max_workers: int | None = None
+                  ) -> tuple[list[ScenarioReport], list[FamilySummary]]:
+        """Multi-seed sweep: replay every (family, seed) pair and aggregate
+        mean / 95% CI per family."""
+        names = list(families) if families is not None \
+            else catalog.list_scenarios()
+        items = [(n, s) for n in names for s in seeds]
+        reports = self.run_many(items, parallel=parallel,
+                                max_workers=max_workers)
+        return reports, summarize_reports(reports)

@@ -168,7 +168,9 @@ def test_straggler_replan_rebalances_and_does_not_regress():
     topo.apply_event(NetworkEvent(1.0, "slowdown", device_id=0, factor=0.25))
     res = engine.replan(topo, NetworkEvent(1.0, "slowdown", device_id=0,
                                            factor=0.25))
-    assert res.path == "straggler-rebalance"
+    # the local rebalance may escalate to the dp/tp/pp neighborhood when the
+    # rebalanced step time stays above the configured gap (ISSUE 3)
+    assert res.path in ("straggler-rebalance", "straggler-neighborhood")
     # incumbent re-scored on the new topology is always a candidate, so the
     # chosen plan can only be at least as good
     from repro.core import simulate_training_step

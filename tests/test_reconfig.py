@@ -1,0 +1,238 @@
+"""Physically-modeled reconfiguration cost (ISSUE 3 tentpole): zero-cost
+identity, checkpoint-byte monotonicity, bandwidth inverse-monotonicity,
+DP-oracle dominance over the greedy oracle, and switch hysteresis
+boundary cases."""
+
+import math
+
+import pytest
+
+from repro.core import (ModelDesc, NetworkEvent, ReconfigCostModel,
+                        ReplanEngine, StrategyCache, hetero_cluster,
+                        megatron_default_plan, plan_hybrid, plan_sequence_dp,
+                        simulate_training_step)
+from repro.scenarios import ScenarioHarness, list_scenarios
+
+TINY = ModelDesc("tiny", n_layers=8, d_model=512, n_heads=8, n_kv_heads=8,
+                 d_ff=2048, vocab=32000)
+BIG = ModelDesc("big", n_layers=16, d_model=1024, n_heads=16, n_kv_heads=16,
+                d_ff=4096, vocab=32000)
+
+
+def tight_fabric(factor: float = 1.0):
+    return hetero_cluster({"V100": 8}, intra_bw_map={"V100": 25e9 * factor},
+                          inter_bw=12.5e9 * factor, gpus_per_node=4)
+
+
+def _plan_pair(model, topo):
+    a = plan_hybrid(topo, model, global_batch=32, seq=512,
+                    with_baseline=False, max_candidates=24).plan
+    b = megatron_default_plan(topo, model)
+    assert a.structural_key() != b.structural_key()
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# Cost model invariants
+# ---------------------------------------------------------------------------
+
+
+def test_zero_cost_for_structurally_identical_plans():
+    topo = tight_fabric()
+    m = ReconfigCostModel(TINY)
+    a, b = _plan_pair(TINY, topo)
+    for p in (a, b):
+        c = m.cost(p, p, topo)
+        assert c.total_s == 0.0 and c.reshard_bytes == 0.0
+    # a switch that actually changes layout costs something
+    assert m.cost(a, b, topo).total_s > 0.0
+
+
+def test_cost_monotone_in_checkpoint_bytes():
+    """A strictly bigger model moves strictly more state for the same plan
+    shapes on the same topology."""
+    topo = tight_fabric()
+    small, big = ReconfigCostModel(TINY), ReconfigCostModel(BIG)
+    assert big.checkpoint_bytes() > small.checkpoint_bytes()
+    a_s, b_s = _plan_pair(TINY, topo)
+    # evaluate the *same structural* switch shapes under both models by
+    # pricing each model's own megatron-default vs planner pair
+    a_b, b_b = _plan_pair(BIG, topo)
+    cs = small.cost(a_s, b_s, topo)
+    cb = big.cost(a_b, b_b, topo)
+    assert cb.reshard_bytes > cs.reshard_bytes
+    assert cb.total_s > cs.total_s
+
+
+def test_cost_inverse_monotone_in_bandwidth():
+    m = ReconfigCostModel(TINY)
+    a, b = _plan_pair(TINY, tight_fabric())
+    nominal = m.cost(a, b, tight_fabric()).total_s
+    degraded_topo = tight_fabric()
+    degraded_topo.apply_event(NetworkEvent(0.0, "bandwidth", factor=0.25))
+    degraded = m.cost(a, b, degraded_topo).total_s
+    boosted_topo = tight_fabric()
+    boosted_topo.apply_event(NetworkEvent(0.0, "bandwidth", factor=4.0))
+    boosted = m.cost(a, b, boosted_topo).total_s
+    assert degraded > nominal > boosted
+
+
+def test_batch_share_rebalance_is_fabric_free():
+    """A plan differing only in batch shares reshards nothing — the
+    physically-modeled replacement for the old flat 2 s charge."""
+    from dataclasses import replace
+    topo = tight_fabric()
+    a, _ = _plan_pair(TINY, topo)
+    if a.dp < 2:
+        pytest.skip("needs dp >= 2 for uneven shares")
+    shares = [1.0 / a.dp] * a.dp
+    shares[0] += 0.1
+    shares[1] -= 0.1
+    b = replace(a, batch_shares=tuple(shares))
+    c = ReconfigCostModel(TINY).cost(a, b, topo)
+    assert c.reshard_bytes == 0.0 and c.store_bytes == 0.0
+    assert c.total_s == pytest.approx(c.base_s)
+
+
+def test_dead_sources_fall_back_to_store_io():
+    """After a failure, shards whose *only* owner died have no alive peer
+    source: they are charged against the host checkpoint store, and a
+    calibrated (slower) store raises the price."""
+    from repro.core import ParallelPlan, split_devices, uniform_stages
+    topo = tight_fabric()
+    m = ReconfigCostModel(TINY)
+    # dp=1, pp=8: every layer has exactly one owner
+    a = ParallelPlan(dp=1, tp=1, pp=8, microbatches=8,
+                     stages=uniform_stages(8, 8,
+                                           split_devices(topo, 1, 1, 8)),
+                     batch_shares=(1.0,))
+    topo.apply_event(NetworkEvent(0.0, "fail", device_id=7))
+    b = ParallelPlan(dp=1, tp=1, pp=7, microbatches=7,
+                     stages=uniform_stages(8, 7,
+                                           split_devices(topo, 1, 1, 7)),
+                     batch_shares=(1.0,))
+    c = m.cost(a, b, topo)
+    assert c.store_bytes > 0.0 and c.io_s > 0.0
+    m.calibrate_io(measured_s=10.0, nbytes=1e9)     # 0.1 GB/s store
+    assert m.io_bw == pytest.approx(1e8)
+    assert m.cost(a, b, topo).io_s > c.io_s
+
+
+def test_stageless_old_plan_infeasible_after_failure_prices_store():
+    """Regression: a stage-less old plan whose default layout needs more
+    devices than survive a failure must price as a full store restore, not
+    raise ValueError out of split_devices (simulate_epoch replay path)."""
+    from repro.core import ParallelPlan
+    topo = tight_fabric()
+    m = ReconfigCostModel(TINY)
+    old = ParallelPlan(dp=2, tp=2, pp=2, microbatches=2)   # world=8, no stages
+    topo.apply_event(NetworkEvent(0.0, "fail", device_id=7))
+    new = plan_hybrid(topo, TINY, global_batch=32, seq=512,
+                      with_baseline=False, max_candidates=24).plan
+    c = m.cost(old, new, topo)                             # must not raise
+    assert c.total_s > 0.0 and c.store_bytes > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Cross-interval DP schedule
+# ---------------------------------------------------------------------------
+
+
+def test_plan_sequence_dp_prefers_staying_when_switch_is_dear():
+    # plan 1 loses interval 0 but wins interval 1; with a dear switch the
+    # gain cannot amortize -> stay on plan 0 throughout
+    steps, choices = plan_sequence_dp(
+        [100.0, 100.0], [[1.0, 1.2], [1.0, 0.9]], lambda i, q, c: 50.0)
+    assert choices == [0, 0]
+    # make the switch cheap -> move to the better plan for interval 1
+    steps2, choices2 = plan_sequence_dp(
+        [100.0, 100.0], [[1.0, 1.2], [1.0, 0.9]], lambda i, q, c: 1.0)
+    assert choices2 == [0, 1]
+    assert steps2 > steps
+
+
+def test_plan_sequence_dp_routes_around_infeasibility():
+    # plan 0 dies in interval 1; DP must switch despite the cost
+    _, choices = plan_sequence_dp(
+        [10.0, 10.0, 10.0],
+        [[1.0, 2.0], [math.inf, 2.0], [1.0, 2.0]],
+        lambda i, q, c: 1.0)
+    assert choices[1] == 1
+
+
+@pytest.mark.parametrize("name", list_scenarios())
+def test_dp_oracle_never_worse_than_greedy_on_catalog(name):
+    h = ScenarioHarness(TINY, global_batch=32, seq=512,
+                        max_candidates=16, n_workers=2)
+    rep = h.run(name, seed=0)
+    assert rep.oracle is not None and rep.oracle_dp is not None
+    assert rep.oracle_dp.avg_step <= rep.oracle.avg_step * (1 + 1e-9), \
+        rep.to_row()
+    # total modeled switch charge is finite and visible
+    assert math.isfinite(rep.switch_cost_s) and rep.switch_cost_s >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# Engine keep/switch hysteresis
+# ---------------------------------------------------------------------------
+
+
+def _hysteresis_engine(horizon):
+    engine = ReplanEngine(TINY, global_batch=32, seq=512,
+                          cache=StrategyCache(), max_candidates=24,
+                          switch_horizon_s=horizon)
+    engine.plan(tight_fabric())
+    return engine
+
+
+def test_hysteresis_boundary_keep_vs_switch():
+    """The same event keeps the incumbent just below the amortization
+    boundary H * (1 - new/old) = cost and switches just above it."""
+    probe = _hysteresis_engine(None)
+    post = tight_fabric(0.2)
+    ev = NetworkEvent(1.0, "bandwidth", factor=0.2)
+    res = probe.replan(post, ev)
+    inc_plan = probe.history[0].plan          # the cold incumbent
+    old = simulate_training_step(inc_plan, TINY, post,
+                                 global_batch=32, seq=512).step_time
+    if res.plan.structural_key() == inc_plan.structural_key():
+        pytest.skip("no better plan on the degraded fabric at this scale")
+    new = res.predicted.step_time
+    cost = probe.reconfig.cost(inc_plan, res.plan, post).total_s
+    assert cost > 0.0 and new < old
+    boundary = cost / (1.0 - new / old)
+    for horizon, expect_kept in ((boundary * 0.9, True),
+                                 (boundary * 1.1, False)):
+        engine = _hysteresis_engine(horizon)
+        r = engine.replan(tight_fabric(0.2), ev)
+        assert r.kept is expect_kept, (horizon, boundary, r.path)
+        if expect_kept:
+            assert r.plan.structural_key() == inc_plan.structural_key()
+            assert engine.incumbent[0].structural_key() \
+                == inc_plan.structural_key()
+        else:
+            assert r.switch_cost == pytest.approx(cost)
+
+
+def test_hysteresis_never_keeps_infeasible_incumbent():
+    topo = tight_fabric()
+    engine = ReplanEngine(TINY, global_batch=32, seq=512,
+                          cache=StrategyCache(), max_candidates=24,
+                          switch_horizon_s=1e-6)   # hostile to switching
+    engine.plan(topo)
+    topo.apply_event(NetworkEvent(1.0, "fail", device_id=7))
+    res = engine.replan(topo, NetworkEvent(1.0, "fail", device_id=7))
+    used = {d for st in res.plan.stages for d in st.device_ids}
+    assert used <= set(topo.alive_ids())
+    assert math.isfinite(res.predicted.step_time)
+
+
+def test_unbounded_horizon_keeps_equal_plans():
+    """switch_horizon_s=None: a candidate that is not strictly better than
+    the incumbent never triggers a switch (no thrash on ties)."""
+    engine = _hysteresis_engine(None)
+    inc = engine.incumbent[0]
+    # replay the *same* fabric: the best candidate ties the incumbent
+    res = engine.replan(tight_fabric(),
+                        NetworkEvent(1.0, "bandwidth", factor=1.0))
+    assert res.plan.structural_key() == inc.structural_key()
