@@ -101,6 +101,13 @@ def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
                 "step_delta_pct": round(delta_pct, 2),
                 "cache_hits": warm.stats.cache_hits,
                 "cache_misses": warm.stats.cache_misses,
+                # cold-path cascade telemetry: fraction of candidates the
+                # tiered pipeline cut before full simulation
+                "cold_prune_rate": round(
+                    cold.search_stats.prune_rate, 3)
+                if cold.search_stats else None,
+                "cold_simulated": cold.search_stats.simulated
+                if cold.search_stats else None,
             })
     # acceptance gates.  (1) On the fig6c reference scenario (LLaMA_7B, the
     # paper's fig6c small-model case) warm bandwidth re-planning is >=5x

@@ -38,44 +38,20 @@ PYTHONPATH=src python -m benchmarks.bench_scenarios [--quick] [--json PATH]
 from __future__ import annotations
 
 import math
-import multiprocessing
 import os
 import time
-from concurrent.futures import ProcessPoolExecutor
 
 from repro.scenarios import (HarnessConfig, get_scenario, list_scenarios,
                              run_payloads, summarize_reports)
-from benchmarks.common import PAPER_MODELS, emit, write_json
-
-
-def _burn(n: int) -> int:
-    s = 0
-    for i in range(n):
-        s += i * i
-    return s
-
-
-def _calibrate(workers: int, n: int = 8_000_000) -> float:
-    """Measured process-scaling ceiling: ``workers`` identical CPU-bound
-    tasks, sequential vs one-per-process."""
-    t0 = time.perf_counter()
-    for _ in range(workers):
-        _burn(n)
-    seq = time.perf_counter() - t0
-    # spawn for the same reason the harness uses it: the parent just ran
-    # planner thread pools, and forking a threaded process risks deadlock
-    ctx = multiprocessing.get_context("spawn")
-    with ProcessPoolExecutor(max_workers=workers, mp_context=ctx) as ex:
-        list(ex.map(_burn, [1] * workers))      # absorb worker start-up
-        t0 = time.perf_counter()
-        list(ex.map(_burn, [n] * workers))
-        par = time.perf_counter() - t0
-    return seq / max(par, 1e-9)
+from benchmarks.common import (PAPER_MODELS, calibrate_process_ceiling, emit,
+                               write_json)
 
 # longest families first: ex.map dispatches in order, so fronting the
-# expensive fail/join family keeps the parallel schedule balanced
-_ORDER = ("cloud_spot", "diurnal_wan", "straggler_churn",
-          "congested_multitenant", "cross_region", "fig6c_dynamic_bw")
+# expensive fail/join + composed families keeps the parallel schedule
+# balanced
+_ORDER = ("diurnal_spot_storm", "cloud_spot", "diurnal_wan",
+          "straggler_churn", "congested_multitenant", "congested_flaky",
+          "cross_region", "fig6c_dynamic_bw")
 _SEEDS = (0, 1)
 
 
@@ -117,7 +93,7 @@ def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
     # calibrate + persist the telemetry BEFORE any gate can fire: a failed
     # assertion must not discard the rows that diagnose it
     workers = min(os.cpu_count() or 1, len(payloads))
-    ceiling = _calibrate(workers) if workers > 1 else 1.0
+    ceiling = calibrate_process_ceiling(workers)
     rows = [r.to_row() for r in seq_reports]
     for row in rows:
         row["parallel_speedup"] = round(speedup, 2)
@@ -135,17 +111,24 @@ def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
 
     # -- gates ---------------------------------------------------------------
     families = {r.scenario for r in seq_reports}
-    assert len(families) >= 6, f"only {sorted(families)} replayed"
+    assert len(families) >= 8, f"only {sorted(families)} replayed"
+    # the composed timelines (ROADMAP open item) actually replay
+    assert {"diurnal_spot_storm", "congested_flaky"} <= families, families
     # every replay actually went through the engine (path histogram is the
     # orchestrator's record of ReplanEngine decisions)
     assert all(r.actions for r in seq_reports if r.n_events), rows
     for r in seq_reports:
         ovs, ovd = r.adapted_over_static, r.adapted_over_oracle_dp
+        ovg = r.adapted_over_oracle
         # adaptation never costs more than ~6% vs standing still...
         assert not math.isfinite(ovs) or ovs <= 1.06, r.to_row()
-        # ...and tracks the clairvoyant DP schedule (cost-model hysteresis
+        # ...and tracks the clairvoyant greedy oracle (cost-model hysteresis
         # allows some drift, plus the local-rebalance vs full-search gap)
-        assert not math.isfinite(ovd) or 0.95 <= ovd <= 1.30, r.to_row()
+        assert not math.isfinite(ovg) or 0.95 <= ovg <= 1.30, r.to_row()
+        # the DP oracle's top-K-widened candidate set (ISSUE 4) makes it up
+        # to ~1.33x tighter than greedy on switch-heavy fail/join traces, so
+        # its tracking band is correspondingly wider
+        assert not math.isfinite(ovd) or 0.95 <= ovd <= 1.40, r.to_row()
         # the DP oracle is never worse than the per-interval greedy oracle
         god = r.greedy_over_dp
         assert not math.isfinite(god) or god >= 1.0 - 1e-9, r.to_row()

@@ -24,8 +24,10 @@ from .planner import (PlanResult, SearchStats, StrategyPoint,
 from .reconfig import ReconfigCost, ReconfigCostModel, plan_sequence_dp
 from .plans import (ParallelPlan, StageAssignment, megatron_default_plan,
                     split_devices, stages_from_sizes, uniform_stages)
+from .search import (CandidateOutcome, SearchExecutor, coarse_lower_bound,
+                     materialize_variant, point_feasible, score_candidates)
 from .simulator import (EpochSim, SimResult, StepSim, check_memory,
-                        memory_feasible, simulate_epoch, simulate_schedule,
-                        simulate_training_step)
+                        memory_feasible, simulate_epoch, simulate_many,
+                        simulate_schedule, simulate_training_step)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -387,6 +387,18 @@ class ClusterTopology:
                 # own private copy, so the cache signature stays as computed
             return self._snap_state._copy_state()
 
+    # -- pickling (search workers ship topologies to spawn processes) ----------
+
+    def __getstate__(self) -> dict:
+        """Drop the snapshot cache and its lock: a worker process rebuilds
+        both lazily on first :meth:`snapshot` call."""
+        return {"devices": list(self.devices.values()),
+                "links": self.links,
+                "events": list(self._events)}
+
+    def __setstate__(self, state: dict) -> None:
+        self.__init__(state["devices"], state["links"], state["events"])
+
     # -- pretty ----------------------------------------------------------------
 
     def describe(self) -> str:

@@ -54,7 +54,7 @@ from .opgraph import ModelDesc
 from .planner import SearchStats, StrategyPoint, _divisors, plan_hybrid
 from .plans import ParallelPlan
 from .reconfig import ReconfigCostModel
-from .simulator import StepSim, simulate_training_step
+from .simulator import StepSim, simulate_many, simulate_training_step
 
 # ---------------------------------------------------------------------------
 # Topology fingerprinting
@@ -291,6 +291,10 @@ class ReplanResult:
     # savings over the remaining horizon did not cover that cost
     switch_cost: float = 0.0
     kept: bool = False
+    # best distinct plans from a full (cold) search, best-first — fills the
+    # cross-interval DP oracle's widened per-interval candidate set when the
+    # engine was built with ``plan_top_k > 1``
+    top_plans: tuple[tuple[ParallelPlan, StepSim], ...] = ()
 
 
 def _comm_scale_estimate(sim: StepSim, plan: ParallelPlan,
@@ -325,12 +329,20 @@ class ReplanEngine:
                  gpus_per_node: int = 8,
                  reconfig: ReconfigCostModel | None = None,
                  switch_horizon_s: float | None = None,
-                 straggler_escalate_gap: float = 1.15):
+                 straggler_escalate_gap: float = 1.15,
+                 executor=None, plan_top_k: int = 1):
         self.model = model
         self.global_batch = global_batch
         self.seq = seq
         self.cache = cache if cache is not None else StrategyCache()
         self.n_workers = n_workers
+        # a repro.core.search.SearchExecutor: full searches then score their
+        # final simulation tier in worker processes (plan identity with the
+        # serial path is guaranteed by the pipeline's canonical tie-break)
+        self.executor = executor
+        # how many distinct best plans a cold search reports in
+        # ReplanResult.top_plans (the DP oracle's widened candidate set)
+        self.plan_top_k = plan_top_k
         self.max_candidates = max_candidates
         self.rescore_top_k = rescore_top_k
         self.rescore_min_sims = rescore_min_sims
@@ -423,7 +435,8 @@ class ReplanEngine:
     def _finish(self, plan: ParallelPlan, sim: StepSim, path: str,
                 t0: float, stats: SearchStats, *, cold: bool,
                 topo: ClusterTopology, ctx: _CacheContext | None,
-                refresh_portfolio: bool = False) -> ReplanResult:
+                refresh_portfolio: bool = False,
+                top_plans: tuple = ()) -> ReplanResult:
         switch_cost, kept = 0.0, False
         if not cold:
             plan, sim, switch_cost, kept = \
@@ -449,7 +462,8 @@ class ReplanEngine:
                                       item[0][0].grad_sync, item[0][1]))]
         res = ReplanResult(plan=plan, predicted=sim, path=path,
                            wall_time=time.perf_counter() - t0, stats=stats,
-                           cold=cold, switch_cost=switch_cost, kept=kept)
+                           cold=cold, switch_cost=switch_cost, kept=kept,
+                           top_plans=tuple(top_plans))
         self.history.append(res)
         return res
 
@@ -463,14 +477,26 @@ class ReplanEngine:
     def score_plans(self, plans: Sequence[ParallelPlan],
                     topo: ClusterTopology) -> list[StepSim | None]:
         """Simulate explicit plans against one topology through the score
-        cache (one fingerprint/context for the whole batch).  Benchmarks
-        that sweep fixed configurations across dynamic network conditions
-        (fig6c) use this; scores repeat for free when the same condition is
-        scored again."""
+        cache (one fingerprint/context for the whole batch; cache misses go
+        through the batched :func:`repro.core.simulator.simulate_many`, so
+        the topology snapshot is materialized once).  Benchmarks that sweep
+        fixed configurations across dynamic network conditions (fig6c) use
+        this; scores repeat for free when the same condition is scored
+        again."""
         ctx = self.cache.context(topo, self.model,
                                  global_batch=self.global_batch, seq=self.seq,
                                  gpus_per_node=self.gpus_per_node)
-        return [self._simulate(p, topo, ctx) for p in plans]
+        out: list[StepSim | None] = [ctx.get_score(p) for p in plans]
+        missing = [i for i, s in enumerate(out) if s is None]
+        if missing:
+            fresh = simulate_many([plans[i] for i in missing], self.model,
+                                  topo, global_batch=self.global_batch,
+                                  seq=self.seq)
+            for i, sim in zip(missing, fresh):
+                if sim is not None:
+                    ctx.put_score(plans[i], sim)
+                out[i] = sim
+        return out
 
     # -- cold path -------------------------------------------------------------
 
@@ -485,11 +511,13 @@ class ReplanEngine:
                           seq=self.seq, gpus_per_node=self.gpus_per_node,
                           n_workers=self.n_workers, with_baseline=False,
                           max_candidates=self.max_candidates,
-                          cache=self.cache)
+                          cache=self.cache, executor=self.executor,
+                          top_k=self.plan_top_k)
         stats = res.search_stats or SearchStats()
         return self._finish(res.plan, res.predicted, "cold-plan", t0, stats,
                             cold=True, topo=topo, ctx=ctx,
-                            refresh_portfolio=True)
+                            refresh_portfolio=True,
+                            top_plans=res.top_plans)
 
     # -- warm paths ------------------------------------------------------------
 
@@ -626,7 +654,7 @@ class ReplanEngine:
                         n_workers=self.n_workers, with_baseline=False,
                         max_candidates=self.max_candidates, cache=self.cache,
                         points=neigh, allow_subset=False,
-                        incumbent_bound=best[0])
+                        incumbent_bound=best[0], executor=self.executor)
                     ns = res.search_stats or SearchStats()
                     stats.explored += ns.explored
                     stats.pruned += ns.pruned
@@ -695,7 +723,8 @@ class ReplanEngine:
                     seq=self.seq, gpus_per_node=self.gpus_per_node,
                     n_workers=self.n_workers, with_baseline=False,
                     max_candidates=self.max_candidates, cache=self.cache,
-                    points=neigh, allow_subset=False)
+                    points=neigh, allow_subset=False,
+                    executor=self.executor)
                 stats = res.search_stats or SearchStats()
                 return self._finish(res.plan, res.predicted, "neighborhood",
                                     t0, stats, cold=False, topo=topo,
@@ -720,7 +749,8 @@ class ReplanEngine:
                           seq=self.seq, gpus_per_node=self.gpus_per_node,
                           n_workers=self.n_workers, with_baseline=False,
                           max_candidates=self.max_candidates,
-                          cache=self.cache, incumbent_bound=bound)
+                          cache=self.cache, incumbent_bound=bound,
+                          executor=self.executor)
         stats = res.search_stats or SearchStats()
         best_plan, best_sim = res.plan, res.predicted
         if inc_sim is not None and inc_sim.step_time < best_sim.step_time:

@@ -17,10 +17,10 @@ children with F(N_child) >= best_UB, and parallel child evaluation.
 
 :func:`plan_hybrid` is the end-to-end entry point: enumerate hybrid-parallel
 strategy candidates (DP/TP/PP/EP/microbatching + collective decomposition),
-prune infeasible ones (memory Eq. 6, divisibility), refine each candidate with
-the layer-assignment B&B and heterogeneous batch shares, and score everything
-with the simulator — concurrently, as the paper accelerates its search with
-multi-threaded simulation.
+then hand them to the tiered pruning cascade in :mod:`repro.core.search`
+(feasibility → analytic bound → coarse estimate → full simulation, with the
+final tier optionally scored in worker processes — the paper accelerates its
+search with parallel simulation, §3.4/§4).
 """
 
 from __future__ import annotations
@@ -60,6 +60,32 @@ class SearchStats:
     cache_hits: int = 0
     cache_misses: int = 0
     wall_time: float = 0.0
+    # -- tiered-cascade telemetry (repro.core.search), counted per
+    # (point, refine) candidate so the tiers share one denominator:
+    # candidates cut by the structural/memory feasibility tier,
+    pruned_feasibility: int = 0
+    # ...by the analytic point_lower_bound tier,
+    pruned_bound: int = 0
+    # ...by the coarse pipeline/sync estimate tier,
+    pruned_coarse: int = 0
+    # ...and candidates that reached the final tier and were fully scored —
+    # by a fresh simulation OR a session-cache hit (the cascade's pruning
+    # denominator; ``cache_hits``/``cache_misses`` tell warm resolution
+    # apart from real simulator work).
+    simulated: int = 0
+
+    @property
+    def cascade_candidates(self) -> int:
+        """Candidates that entered the cascade (all tiers' denominator)."""
+        return (self.pruned_feasibility + self.pruned_bound
+                + self.pruned_coarse + self.simulated + self.rejected)
+
+    @property
+    def prune_rate(self) -> float:
+        """Fraction of cascade candidates cut before full simulation."""
+        total = self.cascade_candidates
+        cut = self.pruned_feasibility + self.pruned_bound + self.pruned_coarse
+        return cut / total if total else 0.0
 
 
 def greedy_assign(graph: OpGraph, topo: ClusterTopology) -> dict[str, int]:
@@ -419,6 +445,10 @@ class PlanResult:
     tuned_baseline: ParallelPlan | None = None
     tuned_baseline_predicted: StepSim | None = None
     search_stats: SearchStats | None = None
+    # best distinct plans by predicted step time (length <= the ``top_k``
+    # requested from plan_hybrid); feeds the cross-interval DP oracle's
+    # widened per-interval candidate set
+    top_plans: tuple[tuple[ParallelPlan, StepSim], ...] = ()
 
     @property
     def speedup_vs_baseline(self) -> float:
@@ -555,10 +585,15 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
                 allow_subset: bool = True,
                 cache=None,
                 incumbent_bound: float | None = None,
-                points: Sequence[StrategyPoint] | None = None) -> PlanResult:
-    """Full planning pipeline (paper §3): enumerate + prune strategies,
-    materialize each (layer B&B + batch shares), score with the simulator in
-    parallel threads, return the argmin with search statistics.
+                points: Sequence[StrategyPoint] | None = None,
+                executor=None, top_k: int = 1,
+                prune: bool = True) -> PlanResult:
+    """End-to-end planning: resolve the candidate set (cache / enumeration /
+    Oobleck-style degrade), then hand it to the tiered search pipeline in
+    :mod:`repro.core.search` — feasibility check, analytic bound, coarse
+    estimate, full simulation — and return the argmin with per-tier search
+    statistics.  This is a thin wrapper; the score loop lives in
+    :func:`repro.core.search.score_candidates`.
 
     ``allow_subset``: when no feasible (dp, tp, pp) factorization exists for
     the exact alive-device count (e.g. 7 survivors after a failure), retire
@@ -571,15 +606,27 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
     only pays for what actually changed.
 
     ``incumbent_bound``: a known-achievable step time (the incumbent plan's
-    score); candidates whose optimistic :func:`point_lower_bound` already
-    exceeds it are cut before materialization/simulation.
+    score); candidates whose analytic lower bounds already meet it are cut
+    before materialization/simulation.
 
     ``points``: pre-seeded candidate list (the re-planning engine passes the
     incumbent's neighborhood); skips enumeration entirely.
+
+    ``executor``: a :class:`repro.core.search.SearchExecutor` — the final
+    simulation tier then runs in worker processes (the serial and parallel
+    paths pick byte-identical plans).  ``n_workers`` is accepted for
+    backward compatibility but ignored: serial scoring needs no thread pool
+    (the GIL made one useless), process parallelism comes from ``executor``.
+
+    ``top_k``: how many distinct best plans to report in
+    :attr:`PlanResult.top_plans`; the cascade keeps pruning sound for the
+    full top-``k`` set, not just the argmin.  ``prune=False`` disables
+    tiers 0-2 and exhaustively simulates every candidate (the soundness
+    reference used by tests/benchmarks).
     """
+    from . import search as search_mod  # deferred: search imports planner
+    del n_workers
     t0 = time.perf_counter()
-    if n_workers is None:
-        n_workers = DEFAULT_N_WORKERS
     if max_candidates is None:
         max_candidates = DEFAULT_MAX_CANDIDATES
     ctx = cache.context(topo, model, global_batch=global_batch, seq=seq,
@@ -625,67 +672,23 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
     stats = SearchStats(explored=enum_stats.explored,
                         pruned=enum_stats.pruned,
                         infeasible=enum_stats.infeasible)
-
-    def score(point: StrategyPoint
-              ) -> tuple[tuple[float, ParallelPlan, StepSim] | None, int, int]:
-        """Evaluate both materializations: heterogeneity-refined (uneven
-        layers/shares) AND plain uniform — on near-identical devices the
-        forced uneven split can lose to uniform, so the search space must
-        include both (operator splitting is a *choice*, §2.3).
-
-        Returns (best, n_rejected, n_bound_pruned)."""
-        if incumbent_bound is not None and point_lower_bound(
-                point, topo, model, global_batch=global_batch,
-                seq=seq) >= incumbent_bound:
-            return None, 0, 1
-        best = None
-        rejected = 0
-        for refine in ((True, False) if topo.is_heterogeneous() else
-                       (False,)):
-            plan = ctx.get_plan(point, refine) if ctx is not None else None
-            if plan is None:
-                try:
-                    plan = materialize_plan(point, topo, model,
-                                            global_batch=global_batch,
-                                            seq=seq, refine_layers=refine)
-                    if not refine:
-                        plan = ParallelPlan(
-                            dp=plan.dp, tp=plan.tp, pp=plan.pp, ep=plan.ep,
-                            microbatches=plan.microbatches, stages=plan.stages,
-                            batch_shares=tuple([1.0 / plan.dp] * plan.dp),
-                            grad_sync=plan.grad_sync, zero1=plan.zero1,
-                            meta=plan.meta)
-                except (ValueError, ZeroDivisionError):
-                    rejected += 1
-                    continue
-                if ctx is not None:
-                    ctx.put_plan(point, refine, plan)
-            sim = ctx.get_score(plan) if ctx is not None else None
-            if sim is None:
-                try:
-                    sim = simulate_training_step(plan, model, topo,
-                                                 global_batch=global_batch,
-                                                 seq=seq)
-                except (ValueError, ZeroDivisionError):
-                    rejected += 1
-                    continue
-                if ctx is not None:
-                    ctx.put_score(plan, sim)
-            if best is None or sim.step_time < best[0]:
-                best = (sim.step_time, plan, sim)
-        return best, rejected, 0
-
-    results: list[tuple[float, ParallelPlan, StepSim]] = []
-    with ThreadPoolExecutor(max_workers=n_workers) as pool:
-        for r, rej, cut in pool.map(score, points):
-            stats.rejected += rej
-            stats.pruned += cut
-            if r is not None:
-                results.append(r)
-    if not results:
+    scored = search_mod.score_candidates(
+        topo, model, global_batch=global_batch, seq=seq, points=points,
+        ctx=ctx, incumbent_bound=incumbent_bound, keep_top_k=max(1, top_k),
+        executor=executor, prune=prune, stats=stats)
+    if not scored:
         raise RuntimeError("no feasible plan found")
-    results.sort(key=lambda r: r[0])
-    best_time, best_plan, best_sim = results[0]
+    best = scored[0]
+    top_plans: list[tuple[ParallelPlan, StepSim]] = []
+    seen_keys: set = set()
+    for out in scored:
+        key = out.plan.structural_key()
+        if key in seen_keys:
+            continue
+        seen_keys.add(key)
+        top_plans.append((out.plan, out.sim))
+        if len(top_plans) >= max(1, top_k):
+            break
 
     baseline = baseline_sim = tuned = tuned_sim = None
     if with_baseline:
@@ -700,11 +703,11 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
         stats.cache_hits, stats.cache_misses = ctx.counters()
     stats.wall_time = time.perf_counter() - t0
     return PlanResult(
-        plan=best_plan, predicted=best_sim,
-        candidates_evaluated=len(results),
+        plan=best.plan, predicted=best.sim,
+        candidates_evaluated=stats.simulated,
         candidates_pruned=stats.pruned + stats.infeasible,
         candidates_rejected=stats.rejected,
         wall_time=stats.wall_time,
         baseline=baseline, baseline_predicted=baseline_sim,
         tuned_baseline=tuned, tuned_baseline_predicted=tuned_sim,
-        search_stats=stats)
+        search_stats=stats, top_plans=tuple(top_plans))

@@ -101,12 +101,20 @@ class ReconfigCostModel:
                  opt_bytes_per_param: float = 8.0,
                  base_overhead_s: float = 0.25,
                  io_bw: float = 4e9,
-                 calibration: float = 1.0):
+                 calibration: float = 1.0,
+                 fabric_scale: float = 1.0,
+                 store_scale: float = 1.0):
         self.model = model
         self.opt_bytes_per_param = opt_bytes_per_param
         self.base_overhead_s = base_overhead_s
         self.io_bw = io_bw
         self.calibration = calibration
+        # per-term scales fit by :meth:`calibrate_terms` from a few measured
+        # switches: fabric covers teardown + peer-to-peer reshard, store the
+        # host checkpoint-store I/O — a single global scale cannot fit both
+        # when the deployment's fabric and disk drift differently.
+        self.fabric_scale = fabric_scale
+        self.store_scale = store_scale
 
     # -- checkpoint footprint --------------------------------------------------
 
@@ -173,6 +181,33 @@ class ReconfigCostModel:
 
     # -- reshard traffic -------------------------------------------------------
 
+    @staticmethod
+    def _sig_interval(sig: tuple) -> tuple[float, float]:
+        """A shard signature as the [lo, hi) slice of its unit it covers.
+
+        Param signatures ``(tp_width, tp_rank)`` slice the unit into
+        ``tp_width`` contiguous equal pieces; ZeRO-1 optimizer signatures
+        ``(tp_width, tp_rank, dp, dp_rank)`` subdivide that TP slice across
+        the DP group.  Expressing signatures as intervals is what lets a
+        nested tp reshape (width 2 -> 4, rank chosen inside the old half)
+        claim its overlap instead of pricing a whole-shard pull."""
+        if len(sig) == 2:
+            w, r = sig
+            return r / w, (r + 1) / w
+        w, r, dp, dpr = sig
+        width = 1.0 / (w * dp)
+        lo = r / w + dpr * width
+        return lo, lo + width
+
+    @classmethod
+    def _missing_fraction(cls, new_sig: tuple, old_sig: tuple) -> float:
+        """Fraction of the unit the destination must fetch: its new slice
+        minus the overlap with the slice it already holds."""
+        nlo, nhi = cls._sig_interval(new_sig)
+        olo, ohi = cls._sig_interval(old_sig)
+        overlap = max(0.0, min(nhi, ohi) - max(nlo, olo))
+        return (nhi - nlo) - overlap
+
     def reshard_traffic(self, old: ParallelPlan, new: ParallelPlan,
                         topo: ClusterTopology
                         ) -> tuple[dict[tuple[int, int], float], float]:
@@ -181,7 +216,9 @@ class ReconfigCostModel:
         Destinations are the new layout's owners; sources are *alive* old
         owners of the same unit (nearest by transfer time, deterministic
         tie-break by device id).  Identical shard signatures move nothing —
-        two structurally identical plans therefore cost zero.
+        two structurally identical plans therefore cost zero — and a
+        destination whose old slice *partially overlaps* its new one (a
+        nested tp reshape) pulls only the missing slice remainder.
 
         A stage-less old plan whose default layout no longer fits the
         (post-failure) topology has no peer sources at all: everything the
@@ -214,10 +251,17 @@ class ReconfigCostModel:
                 pb, ob = self._unit_bytes(u)
                 old_entry = held.get(u)
                 need = 0.0
-                if old_entry is None or old_entry[2] != psig:
-                    need += pf * pb
-                if old_entry is None or old_entry[3] != osig:
-                    need += of * ob
+                if old_entry is None:
+                    need = pf * pb + of * ob
+                else:
+                    # slice-overlap credit: only the part of the new shard
+                    # the device does not already hold crosses the fabric
+                    if old_entry[2] != psig:
+                        need += self._missing_fraction(psig,
+                                                       old_entry[2]) * pb
+                    if old_entry[3] != osig:
+                        need += self._missing_fraction(osig,
+                                                       old_entry[3]) * ob
                 if need <= 0.0:
                     continue
                 srcs = [s for s in owners.get(u, ()) if s != dev]
@@ -260,7 +304,9 @@ class ReconfigCostModel:
             bottleneck = min(bottleneck, bw)
         transfer_s = max(per_dev.values(), default=0.0)
         io_s = store_bytes / self.io_bw if self.io_bw > 0 else 0.0
-        total = self.calibration * (self.base_overhead_s + transfer_s + io_s)
+        total = self.calibration * (
+            self.fabric_scale * (self.base_overhead_s + transfer_s)
+            + self.store_scale * io_s)
         return ReconfigCost(
             total_s=total,
             checkpoint_bytes=self.checkpoint_bytes(new),
@@ -286,11 +332,58 @@ class ReconfigCostModel:
     def calibrate(self, measured_total_s: float, old: ParallelPlan,
                   new: ParallelPlan, topo: ClusterTopology) -> float:
         """Scale the whole model so its prediction for an observed switch
-        matches the end-to-end measurement.  Returns the new scale."""
+        matches the end-to-end measurement.  Returns the new scale.  Prefer
+        :meth:`calibrate_terms` when several measured switches are
+        available — a single global scale cannot fit fabric-dominated and
+        store-dominated switches at once."""
         predicted = self.cost(old, new, topo).total_s
         if predicted > 0 and measured_total_s > 0:
             self.calibration *= measured_total_s / predicted
         return self.calibration
+
+    def calibrate_terms(self, measurements: Sequence[
+            tuple[float, ParallelPlan, ParallelPlan, ClusterTopology]]
+            ) -> tuple[float, float]:
+        """Fit the fabric and host-store scales separately from measured
+        switches (``(measured_s, old, new, topo)`` tuples) by least squares
+        on ``measured = a * (base + transfer) + b * io``.
+
+        With switches that exercise both the fabric and the store, the 2x2
+        normal equations solve both scales; when every measurement is
+        fabric-only (or store-only) the other scale is left untouched
+        instead of extrapolating from zero signal.  Scales are clamped
+        positive.  Returns ``(fabric_scale, store_scale)``.
+        """
+        rows: list[tuple[float, float, float]] = []
+        for measured, old, new, topo in measurements:
+            if measured <= 0:
+                continue
+            c = self.cost(old, new, topo)
+            # un-scaled per-term predictions (ReconfigCost components carry
+            # the raw physical terms; only total_s is scaled)
+            rows.append((c.base_s + c.transfer_s, c.io_s,
+                         measured / max(self.calibration, 1e-12)))
+        if not rows:
+            return self.fabric_scale, self.store_scale
+        sff = sum(f * f for f, _, _ in rows)
+        sss = sum(s * s for _, s, _ in rows)
+        sfs = sum(f * s for f, s, _ in rows)
+        sfm = sum(f * m for f, _, m in rows)
+        ssm = sum(s * m for _, s, m in rows)
+        det = sff * sss - sfs * sfs
+        if det > 1e-18 * max(sff, 1.0) * max(sss, 1.0):
+            fabric = (sfm * sss - ssm * sfs) / det
+            store = (ssm * sff - sfm * sfs) / det
+            self.fabric_scale = max(fabric, 1e-6)
+            self.store_scale = max(store, 1e-6)
+        elif sff > 0 and sss == 0:          # no store signal: fit fabric only
+            self.fabric_scale = max(sfm / sff, 1e-6)
+        elif sss > 0 and sff == 0:          # no fabric signal: fit store only
+            self.store_scale = max(ssm / sss, 1e-6)
+        elif sff > 0:
+            # collinear terms: fall back to scaling the dominant fabric term
+            self.fabric_scale = max(sfm / sff, 1e-6)
+        return self.fabric_scale, self.store_scale
 
 
 # ---------------------------------------------------------------------------

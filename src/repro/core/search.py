@@ -1,0 +1,641 @@
+"""Tiered strategy-search pipeline (paper §3.4 pruning + §4 parallel sim).
+
+The paper's search acceleration rests on two legs: *strategy pruning* that
+discards infeasible/hopeless configurations before they reach the expensive
+simulator, and *parallel execution within the simulator* for the candidates
+that survive.  This module is both legs:
+
+Tier 0  ``point_feasible``      structural/memory feasibility (Eq. 6,
+                                divisibility, EP alignment) — pure arithmetic.
+Tier 1  ``point_lower_bound``   analytic optimistic step time (compute over
+                                aggregate throughput + dp-sync floor).
+Tier 2  ``coarse_lower_bound``  tighter closed-form estimate adding the
+                                pipeline-chain / bottleneck-stage and TP
+                                collective floors — still admissible.
+Tier 3  materialize + simulate  the full pipeline (layer B&B, batch shares,
+                                1F1B step simulation).
+
+Tiers prune against a **monotonically tightening incumbent bound**: the
+k-th best *simulated* step time seen so far (``keep_top_k``), plus any
+externally supplied ``incumbent_bound``.  Every tier-1/2 bound undershoots
+the simulator by construction, and dynamic pruning is strict (``>``), so the
+cascade can never discard the true argmin (or any member of the true
+top-k) — the hypothesis property test in ``tests/test_search.py`` checks
+this against exhaustive scoring.
+
+:class:`SearchExecutor` runs tier 3 in **worker processes** (spawn-safe,
+chunked, picklable ``(point, refine)`` work items).  Workers share one
+cross-process incumbent bound (a ``multiprocessing.Value``) so pruning keeps
+tightening while chunks are in flight, amortize per-process topology/model
+setup via a token-keyed context cache + :func:`repro.core.simulator
+.simulate_many`, and return per-worker cache deltas that the parent merges
+back into the session :class:`repro.core.engine.StrategyCache`.  Because
+pruned candidates provably cannot beat (or tie) any simulated one, and final
+selection is the deterministic ``(step_time, canonical index)`` argmin,
+serial and process-parallel searches pick **byte-identical plans** no matter
+the completion order.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import math
+import os
+import pickle
+from concurrent.futures import ProcessPoolExecutor, as_completed
+from dataclasses import dataclass
+from multiprocessing import get_context
+from typing import Sequence
+
+from .cluster import ClusterTopology
+from .opgraph import ModelDesc
+from .planner import (SearchStats, StrategyPoint, materialize_plan,
+                      point_lower_bound)
+from .plans import ParallelPlan
+from .simulator import StepSim, simulate_many
+
+# ---------------------------------------------------------------------------
+# Tier 0: structural / memory feasibility
+# ---------------------------------------------------------------------------
+
+
+def point_feasible(point: StrategyPoint, topo: ClusterTopology,
+                   model: ModelDesc, *, global_batch: int) -> bool:
+    """The same constraint system ``enumerate_strategies`` emits under
+    (§3.4 / Eq. 6), re-checked cheaply so pre-seeded candidate lists (the
+    re-planning engine's neighborhood) go through identical pruning.  Any
+    point emitted by enumeration passes by construction."""
+    n = len(topo.alive_ids())
+    if point.dp * point.tp * point.pp != n:
+        return False
+    if point.tp < 1 or model.n_heads % point.tp:
+        return False
+    if point.pp > model.n_layers:
+        return False
+    if global_batch % point.dp:
+        return False
+    if (global_batch // point.dp) % point.microbatches:
+        return False
+    mem = min(d.spec.mem_bytes for d in topo.alive_devices)
+    if model.total_params() * 12 / (point.tp * point.pp) > mem * 0.9:
+        return False
+    if model.n_experts and (model.n_experts % point.ep
+                            or point.ep > point.tp):
+        return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Tier 2: coarse admissible estimate
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class _BoundCtx:
+    """Cluster/model aggregates shared by every candidate's tier-2 bound."""
+
+    # distinct alive (DeviceSpec, perf_factor) classes — per-layer floors
+    # take the min across classes, so a heterogeneous fleet collapses to a
+    # handful of roofline evaluations instead of one per device
+    classes: tuple[tuple, ...]
+    # fastest bottleneck any ring over g devices can achieve, indexed by
+    # g - 1; combines three sound caps (see _bound_context)
+    ring_bw_by_size: tuple[float, ...]
+    layer_flops1: tuple[float, ...]    # per-layer flops at batch=1
+    layer_params: tuple[float, ...]    # per-layer parameter counts
+    layer_is_attn: tuple[bool, ...]    # unfused-attention traffic applies
+    act_per_sample: float              # seq * d_model * dtype bytes
+    dtype_bytes: float
+    n_heads: int
+    seq: int
+
+
+def _bound_context(topo: ClusterTopology, model: ModelDesc, *,
+                   seq: int) -> _BoundCtx:
+    from .opgraph import layer_flops
+    classes = tuple({(d.spec, d.perf_factor) for d in topo.alive_devices})
+    alive = set(d.device_id for d in topo.alive_devices)
+    pair_best: dict[tuple[int, int], float] = {}
+    incident: dict[int, float] = {d: 0.0 for d in alive}
+    for (a, b), link in topo.links.items():
+        if a in alive and b in alive and link.edges:
+            bw = max(e.effective_bandwidth for e in link.edges)
+            pair_best[(a, b)] = bw
+            incident[a] = max(incident[a], bw)
+            incident[b] = max(incident[b], bw)
+    # Fastest bottleneck a ring over g devices can possibly achieve.  Three
+    # independently sound caps, combined by min:
+    #   (a) a ring over g >= 3 devices crosses g distinct pairs -> g-th
+    #       largest pair bw (a 2-ring reuses its single pair both ways, so
+    #       only the best pair caps it),
+    #   (b) every member's two ring hops are capped by its best incident
+    #       link -> g-th best-connected device,
+    #   (c) a ring with bottleneck B connects its g members through edges
+    #       of bw >= B -> highest B whose >=B-subgraph has a connected
+    #       component of >= g devices (union-find over descending bw).
+    # (c) is what catches multi-node rings: a tp=32 group over 4 NVLink
+    # islands must cross the inter-node fabric no matter how it is laid
+    # out.
+    #
+    # ALL THREE caps assume every consecutive ring pair is priced on a real
+    # link.  On a sparse link graph (TPU torus) the simulator's
+    # missing-link fallback prices the whole ring at the minimum *existing*
+    # link among the participants — which can exceed every cap above — so
+    # on incomplete graphs the only sound cap is the global best pair bw.
+    pair_bws = sorted(pair_best.values(), reverse=True)
+    dev_bws = sorted(incident.values(), reverse=True)
+    n = len(alive)
+    complete = len(pair_best) == n * (n - 1) // 2
+    comp_bw = [0.0] * (n + 1)
+    parent = {d: d for d in alive}
+    size = {d: 1 for d in alive}
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    reached = 1
+    for (a, b), bw in sorted(pair_best.items(), key=lambda kv: -kv[1]):
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            if size[ra] < size[rb]:
+                ra, rb = rb, ra
+            parent[rb] = ra
+            size[ra] += size[rb]
+            while reached < size[ra]:
+                reached += 1
+                comp_bw[reached] = bw
+    ring_by_size = []
+    for g in range(1, n + 1):
+        if not pair_bws:
+            ring_by_size.append(0.0)
+        elif not complete:
+            ring_by_size.append(pair_bws[0])
+        else:
+            comp = comp_bw[g] if comp_bw[g] > 0 or g == 1 else pair_bws[0]
+            pairs_crossed = g if g >= 3 else 1
+            ring_by_size.append(min(
+                pair_bws[min(pairs_crossed, len(pair_bws)) - 1],
+                dev_bws[min(g, len(dev_bws)) - 1],
+                comp if g > 1 else pair_bws[0]))
+    L = model.n_layers
+    return _BoundCtx(
+        classes=classes,
+        ring_bw_by_size=tuple(ring_by_size),
+        layer_flops1=tuple(layer_flops(model, l, 1, seq) for l in range(L)),
+        layer_params=tuple(float(model.layer_params(l)) for l in range(L)),
+        layer_is_attn=tuple(model.layer_kind(l) == "attn" for l in range(L)),
+        act_per_sample=seq * model.d_model * model.dtype_bytes,
+        dtype_bytes=model.dtype_bytes, n_heads=model.n_heads, seq=seq)
+
+
+def _ring_bw(bctx: _BoundCtx, group_size: int) -> float:
+    """Fastest bottleneck any ring over ``group_size`` devices can achieve
+    (precomputed in :func:`_bound_context`); 0.0 disables the term."""
+    if not bctx.ring_bw_by_size:
+        return 0.0
+    return bctx.ring_bw_by_size[
+        min(group_size, len(bctx.ring_bw_by_size)) - 1]
+
+
+def _coarse_bound(point: StrategyPoint, bctx: _BoundCtx, *,
+                  global_batch: int) -> float:
+    """Admissible pipeline floor for one strategy point, tighter than the
+    aggregate-throughput bound on comm-heavy / memory-bound / deep-pipeline
+    candidates.
+
+    Derivation (each step undershoots the 1F1B simulator):
+
+      * some DP rank carries a batch share >= 1/dp, so its per-microbatch
+        batch is >= global_batch / (dp * M);
+      * that rank's microbatch-0 chain crosses every stage forward then
+        backward: sum_s (fwd_s + bwd_s) = 3x per-layer compute + 2x the TP
+        collective total (2 all-reduces per layer in fwd, 2 in bwd);
+      * per-layer compute is floored by the *minimum over device classes*
+        of that class's own roofline (fusion-aware traffic included) — the
+        actual stage device is one of the classes, so its time can only be
+        higher;
+      * collectives are floored by the ring bandwidth term at the g-th
+        largest pair bandwidth (:func:`_ring_bw`) — any real tp/dp ring's
+        bottleneck edge is at most that;
+      * the bottleneck stage serializes all M microbatches and by
+        pigeonhole holds >= 1/pp of the total work, so the chain also
+        scales by max(1, M / pp);
+      * the gradient-sync floor (2x ring factor on the mean per-stage
+        parameter shard) adds on top — the simulator adds dp_sync (the max
+        over stages, for both sync modes >= the decomposed ring time) after
+        the pipeline flush.
+
+    Ignored-but-positive simulator terms (p2p transfers, remat recompute,
+    MoE all-to-all, collective latency) keep it admissible.  Do not tighten
+    any term toward the simulator without re-running the never-over-prune
+    property test in ``tests/test_search.py``.
+    """
+    dp, tp, pp, M = point.dp, point.tp, point.pp, point.microbatches
+    mb = global_batch / (dp * M)
+    act = mb * bctx.act_per_sample
+    chain = 0.0
+    for l, fl1 in enumerate(bctx.layer_flops1):
+        fl = fl1 * mb / tp
+        base_traffic = (4.0 * act + bctx.layer_params[l] * bctx.dtype_bytes) \
+            / tp
+        attn_traffic = (4.0 * mb * bctx.n_heads * bctx.seq * bctx.seq
+                        * bctx.dtype_bytes / tp) if bctx.layer_is_attn[l] \
+            else 0.0
+        t = math.inf
+        for spec, perf in bctx.classes:
+            traffic = base_traffic
+            if attn_traffic and not spec.supports_fusion:
+                traffic += attn_traffic
+            t = min(t, spec.roofline_time(fl, traffic, perf_factor=perf))
+        chain += 3.0 * t
+    if tp > 1:
+        bw = _ring_bw(bctx, tp)
+        if bw > 0:
+            ar = 2.0 * (tp - 1) / tp * act / bw
+            chain += 4.0 * len(bctx.layer_flops1) * ar
+    pipe = chain * max(1.0, M / pp)
+    sync = 0.0
+    if dp > 1:
+        bw = _ring_bw(bctx, dp)
+        if bw > 0:
+            # mean per-stage parameter shard (max over stages >= mean).
+            # The sync mode is part of the strategy point: decomposed rs+ag
+            # moves 2(dp-1)/dp shards over the ring; the naive
+            # reduce+broadcast pair funnels 2(dp-1) through the root.
+            shard = sum(bctx.layer_params) * bctx.dtype_bytes / (pp * tp)
+            factor = 2.0 * (dp - 1) / dp if point.grad_sync == "rs_ag" \
+                else 2.0 * (dp - 1)
+            sync = factor * shard / bw
+    return pipe + sync
+
+
+def coarse_lower_bound(point: StrategyPoint, topo: ClusterTopology,
+                       model: ModelDesc, *, global_batch: int,
+                       seq: int) -> float:
+    """Tier-2 estimate: max of the tier-1 analytic bound and the pipeline
+    floor — by construction >= :func:`point_lower_bound` and still <= the
+    simulated step time of every materialization of ``point``."""
+    lb1 = point_lower_bound(point, topo, model, global_batch=global_batch,
+                            seq=seq)
+    bctx = _bound_context(topo, model, seq=seq)
+    return max(lb1, _coarse_bound(point, bctx, global_batch=global_batch))
+
+
+# ---------------------------------------------------------------------------
+# Tier 3: materialization + simulation (shared by parent and workers)
+# ---------------------------------------------------------------------------
+
+
+def materialize_variant(point: StrategyPoint, refine: bool,
+                        topo: ClusterTopology, model: ModelDesc, *,
+                        global_batch: int, seq: int) -> ParallelPlan:
+    """One concrete plan per (point, refine) work item.  ``refine=True`` is
+    the heterogeneity-refined materialization (layer B&B + uneven shares);
+    ``refine=False`` forces the plain uniform layout — on near-identical
+    devices the forced uneven split can lose to uniform, so the search
+    space includes both (operator splitting is a *choice*, §2.3)."""
+    plan = materialize_plan(point, topo, model, global_batch=global_batch,
+                            seq=seq, refine_layers=refine)
+    if not refine:
+        plan = ParallelPlan(
+            dp=plan.dp, tp=plan.tp, pp=plan.pp, ep=plan.ep,
+            microbatches=plan.microbatches, stages=plan.stages,
+            batch_shares=tuple([1.0 / plan.dp] * plan.dp),
+            grad_sync=plan.grad_sync, zero1=plan.zero1, meta=plan.meta)
+    return plan
+
+
+@dataclass(frozen=True)
+class CandidateOutcome:
+    """One fully simulated (point, refine) candidate."""
+
+    index: int               # canonical position in the expanded candidate
+    #                          list — the deterministic tie-break
+    point: StrategyPoint
+    refine: bool
+    plan: ParallelPlan
+    sim: StepSim
+
+
+def _score_variant(point: StrategyPoint, refine: bool,
+                   topo: ClusterTopology, model: ModelDesc, *,
+                   global_batch: int, seq: int, ctx=None,
+                   memo: dict | None = None
+                   ) -> tuple[ParallelPlan, StepSim] | None:
+    """Cache-aware materialize + simulate; None on rejection (the candidate
+    raised ValueError/ZeroDivisionError somewhere in the pipeline)."""
+    plan = ctx.get_plan(point, refine) if ctx is not None else None
+    if plan is None:
+        try:
+            plan = materialize_variant(point, refine, topo, model,
+                                       global_batch=global_batch, seq=seq)
+        except (ValueError, ZeroDivisionError):
+            return None
+        if ctx is not None:
+            ctx.put_plan(point, refine, plan)
+    sim = ctx.get_score(plan) if ctx is not None else None
+    if sim is None:
+        key = plan.structural_key()
+        sim = memo.get(key) if memo is not None else None
+        if sim is None:
+            sim = simulate_many([plan], model, topo,
+                                global_batch=global_batch, seq=seq)[0]
+            if sim is None:
+                return None
+            if memo is not None:
+                memo[key] = sim
+        if ctx is not None:
+            ctx.put_score(plan, sim)
+    return plan, sim
+
+
+# ---------------------------------------------------------------------------
+# Worker side (module-level for spawn picklability)
+# ---------------------------------------------------------------------------
+
+_SHARED_BOUND = None       # multiprocessing.Value('d') injected at pool init
+_CTX_TOKEN: str | None = None
+_CTX_STATE: tuple | None = None
+_CTX_MEMO: dict = {}
+
+
+def _pool_init(shared_bound) -> None:
+    global _SHARED_BOUND
+    _SHARED_BOUND = shared_bound
+
+
+def _pool_warm(_: int) -> int:
+    """No-op used to absorb worker start-up (interpreter + repro import)."""
+    return 0
+
+
+def _load_search_ctx(token: str, blob: bytes) -> tuple:
+    """(topo, model, global_batch, seq), unpickled once per worker per
+    search — chunks of the same search reuse it (amortized setup)."""
+    global _CTX_TOKEN, _CTX_STATE, _CTX_MEMO
+    if token != _CTX_TOKEN:
+        _CTX_STATE = pickle.loads(blob)
+        _CTX_TOKEN = token
+        _CTX_MEMO = {}
+    return _CTX_STATE  # type: ignore[return-value]
+
+
+def _score_chunk(token: str, blob: bytes,
+                 tasks: list[tuple[float, int, StrategyPoint, bool]],
+                 threshold: float, tighten: bool
+                 ) -> tuple[list[tuple[int, StrategyPoint, bool,
+                                       ParallelPlan, StepSim]], int, int]:
+    """Score one chunk of (bound, index, point, refine) work items.
+
+    Returns (outcomes, n_rejected, n_pruned).  The pruning threshold is the
+    static ``threshold`` tightened by the cross-process shared bound (only
+    read when ``tighten`` — i.e. ``keep_top_k == 1``, where a single shared
+    scalar is the correct k-th best)."""
+    topo, model, global_batch, seq = _load_search_ctx(token, blob)
+    out: list[tuple[int, StrategyPoint, bool, ParallelPlan, StepSim]] = []
+    rejected = pruned = 0
+    for bound, index, point, refine in tasks:
+        thr = threshold
+        if tighten and _SHARED_BOUND is not None:
+            thr = min(thr, _SHARED_BOUND.value)
+        if bound > thr:
+            pruned += 1
+            continue
+        res = _score_variant(point, refine, topo, model,
+                             global_batch=global_batch, seq=seq,
+                             memo=_CTX_MEMO)
+        if res is None:
+            rejected += 1
+            continue
+        plan, sim = res
+        out.append((index, point, refine, plan, sim))
+        if tighten and _SHARED_BOUND is not None \
+                and sim.step_time < _SHARED_BOUND.value:
+            with _SHARED_BOUND.get_lock():
+                if sim.step_time < _SHARED_BOUND.value:
+                    _SHARED_BOUND.value = sim.step_time
+    return out, rejected, pruned
+
+
+# ---------------------------------------------------------------------------
+# SearchExecutor: long-lived spawn pool for the final tier
+# ---------------------------------------------------------------------------
+
+
+class SearchExecutor:
+    """Process pool that scores the cascade's final tier.
+
+    Spawn-safe (workers import only dependency-free ``repro.core``), reusable
+    across many searches (the scenario harness keeps one executor alive for
+    a whole trace replay instead of re-spawning per interval), and
+    deterministic: whatever the completion order, the parent's
+    ``(step_time, index)`` argmin matches the serial cascade's.
+
+    ``n_procs`` defaults to the machine's core count; ``chunk_size`` to an
+    even split into ~4 chunks per worker (small enough that the tightening
+    bound keeps helping, large enough to amortize dispatch).
+    """
+
+    def __init__(self, n_procs: int | None = None,
+                 chunk_size: int | None = None):
+        self.n_procs = max(1, n_procs if n_procs is not None
+                           else (os.cpu_count() or 1))
+        self.chunk_size = chunk_size
+        self._mp = get_context("spawn")
+        self._pool: ProcessPoolExecutor | None = None
+        self._bound = None
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def _ensure(self) -> ProcessPoolExecutor:
+        if self._pool is None:
+            self._bound = self._mp.Value("d", math.inf)
+            self._pool = ProcessPoolExecutor(
+                max_workers=self.n_procs, mp_context=self._mp,
+                initializer=_pool_init, initargs=(self._bound,))
+        return self._pool
+
+    def warm(self) -> None:
+        """Start the workers now so pool spin-up does not pollute timed
+        regions (benchmarks call this before measuring)."""
+        pool = self._ensure()
+        list(pool.map(_pool_warm, range(self.n_procs)))
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            self._pool = None
+            self._bound = None
+
+    def __enter__(self) -> "SearchExecutor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- scoring ---------------------------------------------------------------
+
+    def run(self, topo: ClusterTopology, model: ModelDesc, *,
+            global_batch: int, seq: int,
+            tasks: Sequence[tuple[float, int, StrategyPoint, bool]],
+            threshold: float, tighten: bool
+            ) -> tuple[list[tuple[int, StrategyPoint, bool,
+                                  ParallelPlan, StepSim]], int, int]:
+        """Score ``tasks`` across the pool; returns (outcomes, rejected,
+        pruned) merged over all chunks."""
+        pool = self._ensure()
+        blob = pickle.dumps((topo, model, global_batch, seq),
+                            protocol=pickle.HIGHEST_PROTOCOL)
+        token = hashlib.sha1(blob).hexdigest()
+        assert self._bound is not None
+        with self._bound.get_lock():
+            self._bound.value = threshold
+        n_chunks = max(1, min(
+            len(tasks),
+            self.n_procs * 4 if self.chunk_size is None
+            else -(-len(tasks) // self.chunk_size)))
+        # stride assignment: tasks arrive bound-sorted, so striding spreads
+        # the most promising candidates across workers — every worker lands
+        # a good incumbent early and the shared bound tightens fast
+        chunks = [list(tasks[i::n_chunks]) for i in range(n_chunks)]
+        futures = [pool.submit(_score_chunk, token, blob, chunk,
+                               threshold, tighten)
+                   for chunk in chunks if chunk]
+        outcomes: list = []
+        rejected = pruned = 0
+        for fut in as_completed(futures):
+            out, rej, pr = fut.result()
+            outcomes.extend(out)
+            rejected += rej
+            pruned += pr
+        return outcomes, rejected, pruned
+
+
+# ---------------------------------------------------------------------------
+# The cascade
+# ---------------------------------------------------------------------------
+
+
+def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
+                     global_batch: int, seq: int,
+                     points: Sequence[StrategyPoint], ctx=None,
+                     incumbent_bound: float | None = None,
+                     keep_top_k: int = 1,
+                     executor: SearchExecutor | None = None,
+                     prune: bool = True,
+                     stats: SearchStats | None = None
+                     ) -> list[CandidateOutcome]:
+    """Run the staged pruning cascade over ``points`` and return every fully
+    simulated candidate, sorted by ``(step_time, canonical index)`` — the
+    head is the argmin, the first ``keep_top_k`` distinct plans are the
+    sound top-k.  ``stats`` (mutated in place) accumulates the per-tier
+    pruned counts."""
+    if stats is None:
+        stats = SearchStats()
+    variants = (True, False) if topo.is_heterogeneous() else (False,)
+    nv = len(variants)
+
+    # canonical expansion: indices cover the FULL candidate list (pruned
+    # included) so tie-breaking matches exhaustive scoring exactly
+    bctx = _bound_context(topo, model, seq=seq) if prune else None
+    tasks: list[tuple[float, int, StrategyPoint, bool]] = []
+    for pi, point in enumerate(points):
+        base = pi * nv
+        if prune:
+            if not point_feasible(point, topo, model,
+                                  global_batch=global_batch):
+                stats.pruned_feasibility += nv
+                stats.pruned += nv
+                continue
+            lb1 = point_lower_bound(point, topo, model,
+                                    global_batch=global_batch, seq=seq)
+            if incumbent_bound is not None and lb1 >= incumbent_bound:
+                stats.pruned_bound += nv
+                stats.pruned += nv
+                continue
+            lb2 = max(lb1, _coarse_bound(point, bctx,  # type: ignore[arg-type]
+                                         global_batch=global_batch))
+            if incumbent_bound is not None and lb2 >= incumbent_bound:
+                stats.pruned_coarse += nv
+                stats.pruned += nv
+                continue
+        else:
+            lb1 = lb2 = 0.0
+        for vi, refine in enumerate(variants):
+            tasks.append((lb2, base + vi, point, refine))
+    # best-first simulation order tightens the incumbent fastest; the index
+    # tie-break keeps equal-bound ordering canonical
+    tasks.sort(key=lambda t: (t[0], t[1]))
+
+    outcomes: list[CandidateOutcome] = []
+    sim_times: list[float] = []
+
+    def threshold() -> float:
+        if not prune or len(sim_times) < keep_top_k:
+            return math.inf
+        return sorted(sim_times)[keep_top_k - 1]
+
+    def note(index: int, point: StrategyPoint, refine: bool,
+             plan: ParallelPlan, sim: StepSim) -> None:
+        outcomes.append(CandidateOutcome(index=index, point=point,
+                                         refine=refine, plan=plan, sim=sim))
+        sim_times.append(sim.step_time)
+        stats.simulated += 1
+
+    if executor is not None and len(tasks) > 1:
+        # resolve session-cache hits in the parent first: they are free and
+        # pre-tighten the bound the workers start from
+        pending: list[tuple[float, int, StrategyPoint, bool]] = []
+        for bound, index, point, refine in tasks:
+            plan = ctx.get_plan(point, refine) if ctx is not None else None
+            sim = ctx.get_score(plan) \
+                if (plan is not None and ctx is not None) else None
+            if plan is not None and sim is not None:
+                note(index, point, refine, plan, sim)
+            else:
+                pending.append((bound, index, point, refine))
+        thr = threshold()
+        live = [t for t in pending if not (prune and t[0] > thr)]
+        cut = len(pending) - len(live)
+        stats.pruned_coarse += cut
+        stats.pruned += cut
+        if live:
+            out, rejected, pruned = executor.run(
+                topo, model, global_batch=global_batch, seq=seq,
+                tasks=live, threshold=thr, tighten=(keep_top_k == 1))
+            stats.rejected += rejected
+            stats.pruned_coarse += pruned
+            stats.pruned += pruned
+            for index, point, refine, plan, sim in out:
+                # merge the worker's cache delta into the session cache
+                if ctx is not None:
+                    ctx.put_plan(point, refine, plan)
+                    ctx.put_score(plan, sim)
+                note(index, point, refine, plan, sim)
+    else:
+        memo: dict = {}
+        for bound, index, point, refine in tasks:
+            thr = threshold()
+            if prune and bound > thr:
+                # attribute the cut to the tier whose bound did it
+                if point_lower_bound(point, topo, model,
+                                     global_batch=global_batch,
+                                     seq=seq) > thr:
+                    stats.pruned_bound += 1
+                else:
+                    stats.pruned_coarse += 1
+                stats.pruned += 1
+                continue
+            res = _score_variant(point, refine, topo, model,
+                                 global_batch=global_batch, seq=seq,
+                                 ctx=ctx, memo=memo if ctx is None else None)
+            if res is None:
+                stats.rejected += 1
+                continue
+            note(index, point, refine, res[0], res[1])
+
+    outcomes.sort(key=lambda o: (o.sim.step_time, o.index))
+    return outcomes

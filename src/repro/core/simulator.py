@@ -349,6 +349,29 @@ def simulate_training_step(plan: ParallelPlan, model: ModelDesc,
                               "rank_makespans": rank_makespans})
 
 
+def simulate_many(plans: Sequence[ParallelPlan], model: ModelDesc,
+                  topo: ClusterTopology, *, global_batch: int, seq: int,
+                  at_time: float = 0.0) -> list["StepSim | None"]:
+    """Batch step simulation: score many plans against one topology state.
+
+    The topology snapshot is materialized once for the whole batch (one
+    event replay + deep copy instead of one per plan), which is what lets
+    search worker processes amortize per-process setup across their chunk.
+    Per-plan infeasibility (ValueError / ZeroDivisionError) yields ``None``
+    instead of aborting the batch — identical semantics to scoring each
+    plan alone, so batched and per-plan scoring are interchangeable.
+    """
+    snap = topo.snapshot(at_time)
+    out: list[StepSim | None] = []
+    for plan in plans:
+        try:
+            out.append(simulate_training_step(
+                plan, model, snap, global_batch=global_batch, seq=seq))
+        except (ValueError, ZeroDivisionError):
+            out.append(None)
+    return out
+
+
 def allreduce_like(topo: ClusterTopology, size: float, ranks: Sequence[int],
                    *, decomposed: bool) -> float:
     from .costmodel import allreduce_time

@@ -21,6 +21,6 @@ from .generators import (congestion_bursts, diurnal_bandwidth,
 from .harness import (FamilySummary, HarnessConfig, PolicyResult,
                       ScenarioHarness, ScenarioReport, run_payloads,
                       run_scenario, summarize_reports)
-from .trace import TRACE_FORMAT, TRACE_VERSION, Trace
+from .trace import TRACE_FORMAT, TRACE_VERSION, Trace, compose_traces
 
 __all__ = [k for k in dir() if not k.startswith("_")]

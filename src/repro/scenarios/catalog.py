@@ -27,6 +27,10 @@ diurnal_wan_crossover deep diurnal trough on the ``ib`` fabric joining two
 congested_crossover   deep multi-tenant bursts on the same ``ib`` fabric;
                       burst floors cross the DP-across-nodes vs
                       PP-across-nodes boundary (S1)
+diurnal_spot_storm    composed timeline: diurnal WAN curve + spot
+                      preemption churn on one mixed fleet (S1+S3)
+congested_flaky       composed timeline: multi-tenant bursts + link flaps
+                      on the same fabric, scale-mode composition (S1)
 ===================== ======================================================
 
 The ``*_crossover`` variants exist because the original bandwidth families
@@ -48,7 +52,7 @@ from repro.core import (ClusterTopology, NetworkEvent, hetero_cluster,
                         homogeneous_cluster, multi_pod_tpu)
 
 from . import generators as gen
-from .trace import Trace
+from .trace import Trace, compose_traces
 
 
 @dataclass(frozen=True)
@@ -195,6 +199,60 @@ register(ScenarioSpec(
         depth_range=(0.6, 0.9),
         duration_range=(horizon / 10, horizon / 4), decay_steps=2),
     tags=("S1", "bandwidth", "scale", "crossover"),
+))
+
+
+# ---------------------------------------------------------------------------
+# Composed timelines (ROADMAP open item): one scenario, several families
+# ---------------------------------------------------------------------------
+
+
+def _composed_events(rng: random.Random, horizon: float, name: str,
+                     parts: Sequence[tuple[str, Callable[
+                         [random.Random, float], list[NetworkEvent]]]]
+                     ) -> list[NetworkEvent]:
+    """Generate each component family with the shared rng (order is part of
+    the scenario's determinism contract) and merge via
+    :func:`repro.scenarios.trace.compose_traces`."""
+    traces = [Trace.from_events(pname, fn(rng, horizon), horizon=horizon)
+              for pname, fn in parts]
+    return compose_traces(traces, name=name, horizon=horizon).to_events()
+
+
+register(ScenarioSpec(
+    name="diurnal_spot_storm",
+    description="diurnal WAN trough + spot preemption churn, one timeline "
+                "(S1+S3 composed)",
+    make_topology=lambda: hetero_cluster({"RTX4090D": 8, "V100": 8},
+                                         gpus_per_node=4),
+    make_events=lambda rng, horizon: _composed_events(
+        rng, horizon, "diurnal_spot_storm", [
+            ("diurnal_wan", lambda r, h: gen.diurnal_bandwidth(
+                r, h, period=h / 2, floor=0.3, selector="ib",
+                samples_per_period=5)),
+            ("spot", lambda r, h: gen.spot_preemptions(
+                r, list(range(16)), h, preempt_rate=4.0 / h,
+                restore_mean=h / 4)),
+        ]),
+    tags=("S1", "S3", "bandwidth", "fail", "join", "composed"),
+))
+
+register(ScenarioSpec(
+    name="congested_flaky",
+    description="multi-tenant congestion bursts + link flaps on the same "
+                "fabric (S1 composed, scale-mode)",
+    make_topology=lambda: homogeneous_cluster(8, "V100", gpus_per_node=4),
+    make_events=lambda rng, horizon: _composed_events(
+        rng, horizon, "congested_flaky", [
+            ("congestion", lambda r, h: gen.congestion_bursts(
+                r, h, burst_rate=5.0 / h, selector="ib",
+                depth_range=(0.3, 0.6),
+                duration_range=(h / 20, h / 6), decay_steps=2)),
+            ("flaps", lambda r, h: gen.link_degradation(
+                r, h, selector="ib", rate=3.0 / h,
+                severity_range=(0.25, 0.6), repair_mean=h / 8)),
+        ]),
+    tags=("S1", "bandwidth", "scale", "composed"),
 ))
 
 

@@ -73,6 +73,16 @@ class HarnessConfig:
     # switch-horizon the engine's cost-model hysteresis decides keep/switch)
     reconfig: ReconfigCostModel | None = None
     oracle: bool = True
+    # DP-oracle candidate widening: each interval contributes its top-K
+    # distinct plans (not just the winner) to plan_sequence_dp's candidate
+    # set — the cascade makes the extra per-interval scoring affordable
+    dp_top_k: int = 4
+    # score the search's final simulation tier in this many worker
+    # processes; ONE SearchExecutor is created per replay and reused across
+    # every interval (None = serial in-process scoring).  Leave None when
+    # the replay itself runs under run_many(parallel=True) — nesting pools
+    # oversubscribes the host.
+    search_procs: int | None = None
 
 
 @dataclass(frozen=True)
@@ -205,35 +215,42 @@ def _aggregate(name: str, segs: Sequence[tuple[float, float, float]],
 def _oracle_policies(cfg: HarnessConfig, topo: ClusterTopology,
                      boundaries: list[float], horizon: float,
                      reconfig: ReconfigCostModel,
-                     extra_plans: Sequence[ParallelPlan]
-                     ) -> tuple[PolicyResult, PolicyResult]:
+                     extra_plans: Sequence[ParallelPlan],
+                     executor=None) -> tuple[PolicyResult, PolicyResult]:
     """(greedy oracle, DP oracle) — both clairvoyant, both charged the
     modeled switch cost.
 
     Greedy re-plans from scratch per interval and pays whenever consecutive
     winners differ.  The DP oracle chooses the best plan *sequence* over the
-    candidate set (per-interval winners + ``extra_plans``) via
-    :func:`plan_sequence_dp`; when the carry-over of a switch cost across an
-    interval boundary makes the DP's carry-free objective mis-rank, the
-    greedy sequence (a member of the DP's search space) is taken instead —
-    so the DP oracle is never worse than the greedy one.
+    candidate set — each interval's top-``cfg.dp_top_k`` distinct plans
+    (the search cascade makes the runner-ups free to report) plus
+    ``extra_plans`` — via :func:`plan_sequence_dp`; when the carry-over of a
+    switch cost across an interval boundary makes the DP's carry-free
+    objective mis-rank, the greedy sequence (a member of the DP's search
+    space) is taken instead — so the DP oracle is never worse than the
+    greedy one.
     """
     engine = ReplanEngine(cfg.model, global_batch=cfg.global_batch,
                           seq=cfg.seq, cache=StrategyCache(),
                           max_candidates=cfg.max_candidates,
-                          n_workers=cfg.n_workers, reconfig=reconfig)
+                          n_workers=cfg.n_workers, reconfig=reconfig,
+                          executor=executor,
+                          plan_top_k=max(1, cfg.dp_top_k))
     snaps = [topo.snapshot(t) for t in boundaries]
     winners: list[ParallelPlan | None] = []
+    runners_up: list[ParallelPlan] = []
     for snap in snaps:
         try:
-            winners.append(engine.plan(snap).plan)
+            res = engine.plan(snap)
+            winners.append(res.plan)
+            runners_up.extend(p for p, _ in res.top_plans)
         except RuntimeError:
             winners.append(None)
 
-    # candidate set: per-interval winners + the adapted policy's plans
+    # candidate set: per-interval top-K plans + the adapted policy's plans
     cands: list[ParallelPlan] = []
     cand_idx: dict = {}
-    for p in [*winners, *extra_plans]:
+    for p in [*winners, *runners_up, *extra_plans]:
         if p is not None and p.structural_key() not in cand_idx:
             cand_idx[p.structural_key()] = len(cands)
             cands.append(p)
@@ -316,11 +333,31 @@ def run_scenario(cfg: HarnessConfig, scenario: str | Trace, seed: int = 0,
 
     reconfig = cfg.reconfig if cfg.reconfig is not None \
         else ReconfigCostModel(cfg.model)
+    # one process pool for the whole replay: every interval's search (the
+    # adapted engine's re-plans AND the oracles' per-boundary full searches)
+    # reuses it instead of re-spawning workers per event
+    executor = None
+    if cfg.search_procs and cfg.search_procs > 1:
+        from repro.core import SearchExecutor
+        executor = SearchExecutor(n_procs=cfg.search_procs)
+    try:
+        return _run_scenario_inner(cfg, trace, topo, seed, boundaries,
+                                   horizon, reconfig, executor, wall0)
+    finally:
+        if executor is not None:
+            executor.close()
+
+
+def _run_scenario_inner(cfg: HarnessConfig, trace: Trace,
+                        topo: ClusterTopology, seed: int,
+                        boundaries: list[float], horizon: float,
+                        reconfig: ReconfigCostModel, executor,
+                        wall0: float) -> ScenarioReport:
     engine = ReplanEngine(cfg.model, global_batch=cfg.global_batch,
                           seq=cfg.seq, cache=StrategyCache(),
                           max_candidates=cfg.max_candidates,
                           n_workers=cfg.n_workers, reconfig=reconfig,
-                          switch_horizon_s=horizon)
+                          switch_horizon_s=horizon, executor=executor)
     orch = DynamicOrchestrator(model=cfg.model, global_batch=cfg.global_batch,
                                seq=cfg.seq, engine=engine)
     cold = engine.plan(topo.snapshot(0.0))
@@ -372,7 +409,8 @@ def run_scenario(cfg: HarnessConfig, scenario: str | Trace, seed: int = 0,
     oracle_res = oracle_dp_res = None
     if cfg.oracle:
         oracle_res, oracle_dp_res = _oracle_policies(
-            cfg, topo, boundaries, horizon, reconfig, adapted_plans)
+            cfg, topo, boundaries, horizon, reconfig, adapted_plans,
+            executor=executor)
 
     actions: dict[str, int] = {}
     for rec in orch.history:

@@ -145,3 +145,27 @@ class Trace:
         ks = " ".join(f"{k}x{v}" for k, v in sorted(kinds.items()))
         return (f"Trace '{self.name}': {len(self.events)} events over "
                 f"{self.horizon:.0f}s ({ks}), seed={self.seed}")
+
+
+def compose_traces(traces: Sequence[Trace], *, name: str | None = None,
+                   horizon: float | None = None,
+                   seed: int | None = None) -> Trace:
+    """Merge several traces into one timeline.
+
+    Generators return plain event lists, so composition is concatenation:
+    events are merged time-sorted (ties keep input order — the sort is
+    stable), the horizon defaults to the longest component's, and the
+    component names are recorded in ``meta["components"]``.  Scale-mode
+    events from different sources compose multiplicatively by construction
+    (PR 2's ``NetworkEvent.mode``), which is what makes naive concatenation
+    semantically sound."""
+    traces = list(traces)
+    if not traces:
+        raise ValueError("compose_traces needs at least one trace")
+    h = horizon if horizon is not None else max(t.horizon for t in traces)
+    events = tuple(e for t in traces for e in t.events if e.time <= h)
+    return Trace(
+        name=name or "+".join(t.name for t in traces),
+        horizon=float(h), events=events, seed=seed,
+        meta=(("components", "|".join(t.name for t in traces)),
+              ("composed", True)))

@@ -185,15 +185,15 @@ def test_straggler_replan_rebalances_and_does_not_regress():
 
 
 def test_plan_hybrid_counts_scoring_rejections(monkeypatch):
+    from repro.core import search as search_mod
     topo = v100_fabric()
-    real = planner_mod.simulate_training_step
+    real = search_mod.simulate_many
 
-    def flaky(plan, model, topo_, **kw):
-        if plan.grad_sync == "allreduce":
-            raise ValueError("injected rejection")
-        return real(plan, model, topo_, **kw)
+    def flaky(plans, model, topo_, **kw):
+        return [None if p.grad_sync == "allreduce" else s
+                for p, s in zip(plans, real(plans, model, topo_, **kw))]
 
-    monkeypatch.setattr(planner_mod, "simulate_training_step", flaky)
+    monkeypatch.setattr(search_mod, "simulate_many", flaky)
     res = plan_hybrid(topo, DESC, global_batch=32, seq=512,
                       with_baseline=False)
     assert res.candidates_rejected > 0

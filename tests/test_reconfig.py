@@ -236,3 +236,106 @@ def test_unbounded_horizon_keeps_equal_plans():
     res = engine.replan(tight_fabric(),
                         NetworkEvent(1.0, "bandwidth", factor=1.0))
     assert res.plan.structural_key() == inc.structural_key()
+
+
+# ---------------------------------------------------------------------------
+# Partial-overlap reshard credit (ISSUE 4 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_sig_interval_and_missing_fraction():
+    f = ReconfigCostModel._missing_fraction
+    # identical slices move nothing
+    assert f((2, 0), (2, 0)) == 0.0
+    # nested tp reshape: new quarter inside the old half is fully covered
+    assert f((4, 0), (2, 0)) == 0.0
+    assert f((4, 1), (2, 0)) == 0.0
+    # new quarter outside the old half is a full pull of the new slice
+    assert f((4, 2), (2, 0)) == pytest.approx(0.25)
+    # widening 4 -> 2: the old quarter covers half of the new half
+    assert f((2, 0), (4, 0)) == pytest.approx(0.25)
+    # disjoint same-width slices pull everything
+    assert f((2, 0), (2, 1)) == pytest.approx(0.5)
+    # zero1 optimizer sub-slices nest inside their tp slice
+    assert f((2, 0, 2, 0), (2, 0)) == 0.0
+    assert f((2, 0), (2, 0, 2, 0)) == pytest.approx(0.25)
+
+
+def test_nested_tp_reshape_cheaper_than_disjoint_switch():
+    """Widening tp with slice overlap (nested reshape) must price below the
+    whole-shard pulls the pre-credit model charged."""
+    from repro.core import ParallelPlan, split_devices, uniform_stages
+    topo = tight_fabric()
+
+    def tp_plan(tp):
+        groups = split_devices(topo, 1, tp, 8 // tp)
+        return ParallelPlan(dp=1, tp=tp, pp=8 // tp, microbatches=8 // tp,
+                            stages=uniform_stages(TINY.n_layers, 8 // tp,
+                                                  groups),
+                            batch_shares=(1.0,), grad_sync="rs_ag",
+                            zero1=False)
+
+    m = ReconfigCostModel(TINY)
+    narrow, wide = tp_plan(2), tp_plan(4)
+    pair_bytes, store = m.reshard_traffic(narrow, wide, topo)
+    moved = sum(pair_bytes.values()) + store
+    # every device's new slice is either nested in its old slice (overlap
+    # credit: free) or lands on a new owner; the pre-credit model charged
+    # the full new layout for every signature change
+    full_pull = sum(
+        m._unit_bytes(u)[0] * pf + m._unit_bytes(u)[1] * of
+        for dev, units in m._layout(wide, topo).items()
+        for u, (pf, of, psig, osig) in units.items()
+        if m._layout(narrow, topo).get(dev, {}).get(u, (None,) * 4)[2]
+        != psig)
+    assert moved < full_pull
+    # and the overlap credit never makes a real switch free
+    assert m.cost(narrow, wide, topo).total_s > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Per-term calibration (ISSUE 4 satellite)
+# ---------------------------------------------------------------------------
+
+
+def _store_heavy_switch(model):
+    """A switch whose old layout has no alive peers (stage-less old plan on
+    a degraded topology) — everything restores from the host store."""
+    from repro.core import ParallelPlan
+    topo = tight_fabric()
+    topo.apply_event(NetworkEvent(0.0, "fail", device_id=7))
+    old = ParallelPlan(dp=1, tp=8, pp=1, microbatches=1, grad_sync="rs_ag")
+    new = plan_hybrid(topo, model, global_batch=32, seq=512,
+                      with_baseline=False, max_candidates=24).plan
+    return old, new, topo
+
+
+def test_calibrate_terms_recovers_per_term_scales():
+    topo = tight_fabric()
+    a, b = _plan_pair(TINY, topo)
+    old_s, new_s, topo_s = _store_heavy_switch(TINY)
+    truth = ReconfigCostModel(TINY, fabric_scale=2.0, store_scale=0.5)
+    measurements = [
+        (truth.cost(a, b, topo).total_s, a, b, topo),
+        (truth.cost(b, a, topo).total_s, b, a, topo),
+        (truth.cost(old_s, new_s, topo_s).total_s, old_s, new_s, topo_s),
+    ]
+    fit = ReconfigCostModel(TINY)
+    fabric, store = fit.calibrate_terms(measurements)
+    assert fabric == pytest.approx(2.0, rel=1e-6)
+    assert store == pytest.approx(0.5, rel=1e-6)
+    # the fitted model reproduces every measurement
+    for measured, old, new, t in measurements:
+        assert fit.cost(old, new, t).total_s == pytest.approx(measured,
+                                                              rel=1e-6)
+
+
+def test_calibrate_terms_without_store_signal_keeps_store_scale():
+    topo = tight_fabric()
+    a, b = _plan_pair(TINY, topo)
+    truth = ReconfigCostModel(TINY, fabric_scale=3.0)
+    fit = ReconfigCostModel(TINY, store_scale=7.0)
+    fabric, store = fit.calibrate_terms(
+        [(truth.cost(a, b, topo).total_s, a, b, topo)])
+    assert fabric == pytest.approx(3.0, rel=1e-6)
+    assert store == 7.0                  # no store bytes observed: untouched

@@ -174,3 +174,69 @@ def test_harness_delivers_event_at_horizon():
 def test_harness_explicit_trace_requires_topo():
     with pytest.raises(ValueError, match="explicit topology"):
         _harness().run(build_trace("straggler_churn", seed=0))
+
+
+# ---------------------------------------------------------------------------
+# Composed timelines (ISSUE 4 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_compose_traces_merges_sorted_with_max_horizon():
+    from repro.scenarios import compose_traces
+
+    a = Trace.from_events("a", [NetworkEvent(10.0, "bandwidth", factor=0.5,
+                                             mode="scale"),
+                                NetworkEvent(30.0, "bandwidth", factor=2.0,
+                                             mode="scale")], horizon=40.0)
+    b = Trace.from_events("b", [NetworkEvent(20.0, "fail", device_id=3)],
+                          horizon=100.0)
+    c = compose_traces([a, b])
+    assert c.name == "a+b"
+    assert c.horizon == 100.0
+    assert [e.time for e in c.events] == [10.0, 20.0, 30.0]
+    assert dict(c.meta)["components"] == "a|b"
+    # explicit horizon clips later events
+    clipped = compose_traces([a, b], name="clip", horizon=15.0)
+    assert [e.time for e in clipped.events] == [10.0]
+    with pytest.raises(ValueError):
+        compose_traces([])
+
+
+def test_composed_catalog_entries_mix_their_families():
+    storm = build_trace("diurnal_spot_storm", seed=1)
+    kinds = {e.kind for e in storm.events}
+    assert "bandwidth" in kinds and "fail" in kinds      # S1 + S3 composed
+    assert dict(storm.meta)["family"] == "diurnal_spot_storm"
+    flaky = build_trace("congested_flaky", seed=1)
+    assert all(e.kind == "bandwidth" and e.mode == "scale"
+               for e in flaky.events)
+    # flaps + bursts interleave: more events than either family alone would
+    # produce at these rates, and net level returns to ~1.0 when every
+    # burst/flap pair completes inside the horizon
+    assert len(flaky.events) >= 6
+
+
+def test_composed_scenario_replays_through_harness():
+    rep = _harness().run("congested_flaky", seed=0)
+    assert rep.n_events == len(build_trace("congested_flaky", seed=0))
+    assert rep.adaptations == rep.n_events
+    assert math.isfinite(rep.adapted.avg_step)
+
+
+@pytest.mark.slow
+def test_harness_search_procs_matches_serial_scoring():
+    """A replay whose searches score in worker processes (one executor
+    reused across all intervals) is plan-for-plan identical to the serial
+    replay — step timelines, switch counts, and charges all match."""
+    from dataclasses import replace as dc_replace
+
+    h = _harness()
+    base = h.run("fig6c_dynamic_bw", seed=0)
+    h.cfg = dc_replace(h.cfg, search_procs=2)
+    par = h.run("fig6c_dynamic_bw", seed=0)
+    assert par.adapted.timeline == base.adapted.timeline
+    assert par.static.timeline == base.static.timeline
+    assert par.replans == base.replans
+    assert par.switch_cost_s == base.switch_cost_s
+    if base.oracle_dp is not None:
+        assert par.oracle_dp.timeline == base.oracle_dp.timeline

@@ -1,0 +1,243 @@
+"""Tiered search pipeline (ISSUE 4 tentpole): cascade soundness, per-tier
+telemetry, process-parallel determinism, and cross-process cache merge."""
+
+import math
+
+import pytest
+
+from repro.core import (ModelDesc, SearchExecutor, StrategyCache,
+                        coarse_lower_bound, enumerate_strategies,
+                        hetero_cluster, homogeneous_cluster,
+                        materialize_variant, multi_pod_tpu, plan_hybrid,
+                        point_feasible, point_lower_bound, score_candidates,
+                        simulate_training_step)
+from repro.core.planner import SearchStats
+
+DESC = ModelDesc(name="m", n_layers=12, d_model=1024, n_heads=16,
+                 n_kv_heads=16, d_ff=4096, vocab=32000)
+
+CLUSTERS = [
+    ("hetero", lambda: hetero_cluster({"RTX4090D": 4, "V100": 4},
+                                      gpus_per_node=4)),
+    ("homo", lambda: homogeneous_cluster(8, "V100", gpus_per_node=8)),
+    ("slowlink", lambda: hetero_cluster({"V100": 8}, inter_bw=5e9,
+                                        gpus_per_node=4)),
+    # sparse link graph: the simulator's missing-link fallback can price a
+    # ring optimistically, so the bound must drop its ring caps here
+    ("torus", lambda: multi_pod_tpu(pods=2, chips_per_pod=16)),
+    # unique fastest pair: a 2-member ring crosses only ONE pair, so the
+    # g-th-largest pair cap must not apply at g=2 (review regression)
+    ("unique-fast-pair", lambda: hetero_cluster({"H100": 2, "RTX4090D": 2},
+                                                gpus_per_node=2)),
+]
+
+
+# ---------------------------------------------------------------------------
+# Soundness: the cascade never discards the true argmin
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,make", CLUSTERS)
+def test_cascade_matches_exhaustive(name, make):
+    topo = make()
+    exh = plan_hybrid(topo, DESC, global_batch=32, seq=1024,
+                      with_baseline=False, prune=False)
+    cas = plan_hybrid(topo, DESC, global_batch=32, seq=1024,
+                      with_baseline=False)
+    assert cas.plan.to_json() == exh.plan.to_json(), name
+    assert cas.predicted.step_time == exh.predicted.step_time
+    # the cascade did strictly less simulation work
+    assert cas.search_stats.simulated <= exh.search_stats.simulated
+
+
+def test_cascade_top_k_matches_exhaustive_top_k():
+    topo = hetero_cluster({"RTX4090D": 4, "V100": 4}, gpus_per_node=4)
+    exh = plan_hybrid(topo, DESC, global_batch=32, seq=1024,
+                      with_baseline=False, prune=False, top_k=3)
+    cas = plan_hybrid(topo, DESC, global_batch=32, seq=1024,
+                      with_baseline=False, top_k=3)
+    assert len(cas.top_plans) == len(exh.top_plans) == 3
+    for (pa, sa), (pb, sb) in zip(cas.top_plans, exh.top_plans):
+        assert pa.to_json() == pb.to_json()
+        assert sa.step_time == sb.step_time
+
+
+def test_coarse_bound_admissible_for_every_candidate():
+    """Tier-1/2 bounds undershoot the simulator for BOTH materializations
+    of every enumerated point (the invariant pruning soundness rests on)."""
+    for name, make in CLUSTERS:
+        topo = make()
+        pts, _ = enumerate_strategies(topo, DESC, global_batch=32)
+        variants = (True, False) if topo.is_heterogeneous() else (False,)
+        for p in pts:
+            lb1 = point_lower_bound(p, topo, DESC, global_batch=32, seq=1024)
+            lb2 = coarse_lower_bound(p, topo, DESC, global_batch=32,
+                                     seq=1024)
+            assert lb2 >= lb1 - 1e-12
+            for refine in variants:
+                try:
+                    plan = materialize_variant(p, refine, topo, DESC,
+                                               global_batch=32, seq=1024)
+                    sim = simulate_training_step(plan, DESC, topo,
+                                                 global_batch=32, seq=1024)
+                except (ValueError, ZeroDivisionError):
+                    continue
+                assert lb2 <= sim.step_time + 1e-12, (name, p, refine)
+
+
+def test_point_feasible_accepts_every_enumerated_point():
+    for name, make in CLUSTERS:
+        topo = make()
+        pts, _ = enumerate_strategies(topo, DESC, global_batch=32)
+        assert pts
+        assert all(point_feasible(p, topo, DESC, global_batch=32)
+                   for p in pts), name
+
+
+def test_point_feasible_rejects_structural_mismatch():
+    from repro.core import StrategyPoint
+    topo = homogeneous_cluster(8, "V100", gpus_per_node=8)
+    # wrong world size / batch non-divisible / memory blow-up
+    assert not point_feasible(StrategyPoint(2, 2, 1, 1, 2, "rs_ag"),
+                              topo, DESC, global_batch=32)
+    assert not point_feasible(StrategyPoint(8, 1, 1, 1, 1, "rs_ag"),
+                              topo, DESC, global_batch=3)
+    big = ModelDesc(name="big", n_layers=96, d_model=12288, n_heads=96,
+                    n_kv_heads=96, d_ff=49152, vocab=50000)
+    assert not point_feasible(StrategyPoint(1, 8, 1, 1, 1, "rs_ag"),
+                              topo, big, global_batch=32)
+
+
+# ---------------------------------------------------------------------------
+# Per-tier telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_tier_telemetry_accounts_for_every_candidate():
+    topo = hetero_cluster({"RTX4090D": 4, "V100": 4}, gpus_per_node=4)
+    pts, _ = enumerate_strategies(topo, DESC, global_batch=32)
+    stats = SearchStats()
+    scored = score_candidates(topo, DESC, global_batch=32, seq=1024,
+                              points=pts, stats=stats)
+    n_variants = len(pts) * 2            # hetero: refined + uniform
+    assert stats.cascade_candidates == n_variants
+    assert stats.simulated == len(scored)
+    assert 0.0 <= stats.prune_rate < 1.0
+    # head of the scored list is the argmin with canonical tie-break
+    best = min(scored, key=lambda o: (o.sim.step_time, o.index))
+    assert scored[0] is best
+
+
+def test_incumbent_bound_prunes_through_tiers():
+    """An externally supplied achievable bound (the re-planning engine's
+    incumbent score) cuts candidates at the analytic tiers."""
+    topo = hetero_cluster({"RTX4090D": 4, "V100": 4}, gpus_per_node=4)
+    pts, _ = enumerate_strategies(topo, DESC, global_batch=32)
+    base = plan_hybrid(topo, DESC, global_batch=32, seq=1024,
+                       with_baseline=False)
+    stats = SearchStats()
+    scored = score_candidates(topo, DESC, global_batch=32, seq=1024,
+                              points=pts, stats=stats,
+                              incumbent_bound=base.predicted.step_time * 1.01)
+    assert stats.pruned_bound + stats.pruned_coarse > 0
+    # the bound is achievable, so the argmin survives
+    assert scored[0].plan.to_json() == base.plan.to_json()
+
+
+# ---------------------------------------------------------------------------
+# Process-parallel scoring: determinism + cache-delta merge
+# ---------------------------------------------------------------------------
+
+
+def test_parallel_search_equals_serial_plan_for_plan():
+    topo = hetero_cluster({"RTX4090D": 4, "V100": 4}, gpus_per_node=4)
+    ser = plan_hybrid(topo, DESC, global_batch=32, seq=1024,
+                      with_baseline=False, top_k=3)
+    with SearchExecutor(n_procs=2) as ex:
+        par = plan_hybrid(topo, DESC, global_batch=32, seq=1024,
+                          with_baseline=False, top_k=3, executor=ex)
+    assert par.plan.to_json() == ser.plan.to_json()
+    assert par.predicted.step_time == ser.predicted.step_time
+    for (pa, _), (pb, _) in zip(par.top_plans, ser.top_plans):
+        assert pa.to_json() == pb.to_json()
+
+
+def test_parallel_search_merges_cache_deltas():
+    """Worker-produced plans/scores land in the session StrategyCache: a
+    follow-up serial search on the same fingerprint is a pure cache hit."""
+    topo = homogeneous_cluster(8, "V100", gpus_per_node=8)
+    cache = StrategyCache()
+    with SearchExecutor(n_procs=2) as ex:
+        r1 = plan_hybrid(topo, DESC, global_batch=32, seq=512,
+                         with_baseline=False, executor=ex, cache=cache)
+    r2 = plan_hybrid(topo, DESC, global_batch=32, seq=512,
+                     with_baseline=False, cache=cache)
+    assert r2.search_stats.cache_misses == 0
+    assert r2.search_stats.cache_hits > 0
+    assert r2.plan.to_json() == r1.plan.to_json()
+    assert r2.predicted.step_time == r1.predicted.step_time
+
+
+def test_cache_context_merge_entries_visible():
+    """Unit view of the merge: after a parallel search, the cache context
+    holds a materialized plan + score for every simulated candidate."""
+    topo = homogeneous_cluster(8, "V100", gpus_per_node=8)
+    cache = StrategyCache()
+    with SearchExecutor(n_procs=2) as ex:
+        res = plan_hybrid(topo, DESC, global_batch=32, seq=512,
+                          with_baseline=False, executor=ex, cache=cache)
+    ctx = cache.context(topo, DESC, global_batch=32, seq=512)
+    entries = ctx.materialized()
+    assert len(entries) >= res.search_stats.simulated
+    assert sum(1 for _, _, sim in entries if sim is not None) \
+        >= res.search_stats.simulated
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: the cascade never prunes the true argmin (randomized)
+# ---------------------------------------------------------------------------
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAS_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover
+    _HAS_HYPOTHESIS = False
+
+if _HAS_HYPOTHESIS:
+    @st.composite
+    def model_and_cluster(draw):
+        heads = draw(st.sampled_from([2, 4, 8]))
+        model = ModelDesc(name="h", n_layers=draw(st.integers(2, 8)),
+                          d_model=128 * heads, n_heads=heads,
+                          n_kv_heads=heads,
+                          d_ff=draw(st.sampled_from([512, 1024, 2048])),
+                          vocab=1000)
+        kinds = draw(st.sampled_from([{"V100": 4}, {"RTX4090D": 4},
+                                      {"RTX4090D": 2, "V100": 2},
+                                      {"RTX4090D": 4, "V100": 4},
+                                      {"V100": 8}]))
+        inter = draw(st.sampled_from([5e9, 25e9, 100e9]))
+        topo = hetero_cluster(kinds, inter_bw=inter,
+                              gpus_per_node=draw(st.sampled_from([2, 4])))
+        gb = draw(st.sampled_from([4, 8, 16]))
+        return model, topo, gb
+
+    @pytest.mark.slow
+    @settings(max_examples=20, deadline=None)
+    @given(model_and_cluster())
+    def test_cascade_never_prunes_true_argmin(mc):
+        model, topo, gb = mc
+        try:
+            exh = plan_hybrid(topo, model, global_batch=gb, seq=256,
+                              with_baseline=False, prune=False)
+        except RuntimeError:
+            # no feasible plan at all: the cascade must agree
+            with pytest.raises(RuntimeError):
+                plan_hybrid(topo, model, global_batch=gb, seq=256,
+                            with_baseline=False)
+            return
+        cas = plan_hybrid(topo, model, global_batch=gb, seq=256,
+                          with_baseline=False)
+        assert cas.plan.to_json() == exh.plan.to_json()
+        assert cas.predicted.step_time == exh.predicted.step_time
