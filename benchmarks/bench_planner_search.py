@@ -1,6 +1,7 @@
 """Planner search efficiency (paper §3.4 + §4 parallel simulation).
 
-Exercises the tiered search pipeline end to end, per cluster size:
+Exercises the tiered search pipeline end to end, per (topology, cluster
+size):
 
   * EXHAUSTIVE: every candidate fully simulated (``prune=False``) — the
     soundness reference and the cost floor the cascade is judged against,
@@ -9,13 +10,19 @@ Exercises the tiered search pipeline end to end, per cluster size:
   * PARALLEL CASCADE: the same pipeline with the final simulation tier
     scored across worker processes (``SearchExecutor``).
 
+Topologies cover both a dense hetero fabric and the sparse TPU torus: with
+multi-hop routed transfer pricing (ISSUE 5) the coarse tier keeps its
+incident/connectivity ring caps on sparse link graphs, so the torus rows
+gate on a nonzero coarse-tier prune count.
+
 Gates: the cascade's argmin must equal the exhaustive argmin byte-for-byte,
 the parallel plan must equal the serial plan byte-for-byte, the cascade
-must prune a nonzero fraction of candidates before full simulation, and —
-where a CPU-bound calibration probe shows this host can physically deliver
->= 2.5x process scaling — the parallel search must reach >= 2x over serial.
-On shared-hyperthread / 2-vCPU containers the speedup is reported, not
-asserted (same policy as the PR 2 scenario-sweep gate).
+must prune a nonzero fraction of candidates before full simulation, the
+sparse-topology rows must show coarse-tier pruning, and — where a CPU-bound
+calibration probe shows this host can physically deliver >= 2.5x process
+scaling — the parallel search must reach >= 2x over serial.  On shared-
+hyperthread / 2-vCPU containers the speedup is reported, not asserted
+(same policy as the PR 2 scenario-sweep gate).
 
 PYTHONPATH=src python -m benchmarks.bench_planner_search [--quick] [--json P]
 """
@@ -26,9 +33,23 @@ import os
 import time
 
 from repro.core import (SearchExecutor, enumerate_strategies, hetero_cluster,
-                        plan_hybrid)
+                        multi_pod_tpu, plan_hybrid)
 from benchmarks.common import (PAPER_MODELS, calibrate_process_ceiling, emit,
                                write_json)
+
+
+def _configs(quick: bool):
+    """(topology, gpus, builder) rows.  The torus stays at 32 chips in both
+    modes: it is the sparse-graph routing + coarse-cap coverage, not the
+    scaling story."""
+    sizes = (16,) if quick else (16, 64)
+    cfgs = [("hetero", n,
+             lambda n=n: hetero_cluster({"RTX4090D": n // 2, "V100": n // 2},
+                                        gpus_per_node=8))
+            for n in sizes]
+    cfgs.append(("tpu-torus", 32,
+                 lambda: multi_pod_tpu(pods=2, chips_per_pod=16)))
+    return cfgs
 
 
 def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
@@ -39,9 +60,8 @@ def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
     executor = SearchExecutor(n_procs=procs)
     executor.warm()          # pool spin-up stays out of the timed region
     try:
-        for n in (16, 64) if not quick else (16,):
-            topo = hetero_cluster({"RTX4090D": n // 2, "V100": n // 2},
-                                  gpus_per_node=8)
+        for topology, n, make in _configs(quick):
+            topo = make()
             pts, enum_stats = enumerate_strategies(topo, desc,
                                                    global_batch=4 * n)
             kw = dict(global_batch=4 * n, seq=2048, with_baseline=False,
@@ -59,6 +79,7 @@ def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
             st = ser.search_stats
             speedup = t_ser / max(t_par, 1e-9)
             rows.append({
+                "topology": topology,
                 "gpus": n, "candidates": len(pts),
                 "argmin_matches_exhaustive":
                     ser.plan.to_json() == exh.plan.to_json(),
@@ -97,6 +118,14 @@ def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
             ("process-parallel search diverged from serial", r)
         assert r["prune_rate"] > 0.0, \
             ("cascade pruned nothing before full simulation", r)
+    # ISSUE 5 acceptance: the coarse tier's ring/connectivity caps are
+    # active on the sparse TPU-torus link graph (routed transfer pricing
+    # makes them sound there) and actually cut candidates
+    sparse = [r for r in rows if r["topology"] == "tpu-torus"]
+    assert sparse, rows
+    for r in sparse:
+        assert r["pruned_coarse"] > 0, \
+            ("sparse-graph coarse caps pruned nothing", r)
     # parallel gate: asserted only where the calibrated ceiling shows real
     # multicore headroom (same policy as the bench_scenarios gate)
     if ceiling >= 2.5:

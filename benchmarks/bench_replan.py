@@ -108,7 +108,24 @@ def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
                 if cold.search_stats else None,
                 "cold_simulated": cold.search_stats.simulated
                 if cold.search_stats else None,
+                # mirrors the warm-quality internal gate (bandwidth rows:
+                # warm step within 5% of cold) as a row field, so the CI
+                # bench-regression compare blocks on it even though this
+                # bench's asserts run under continue-on-error in CI
+                # computed from the same rounded value the internal gate
+                # asserts on, so the two verdicts cannot diverge at the
+                # 5.0-boundary
+                "quality_ok": scenario != "bandwidth"
+                or abs(round(delta_pct, 2)) <= 5.0,
             })
+    # persist the telemetry BEFORE any gate can fire (same policy as the
+    # other benches): the CI bench-regression compare needs the JSON even
+    # when a gate trips, and a failed assertion must not discard the rows
+    # that diagnose it
+    emit(rows, "bench_replan (cold plan_hybrid vs warm ReplanEngine.replan; "
+               "gate: fig6c bandwidth scenario >=5x, step within 5%)")
+    if json_path:
+        write_json(rows, json_path)
     # acceptance gates.  (1) On the fig6c reference scenario (LLaMA_7B, the
     # paper's fig6c small-model case) warm bandwidth re-planning is >=5x
     # faster than a cold plan.  Models whose memory constraints leave only a
@@ -133,10 +150,6 @@ def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
                              "straggler-neighborhood", "neighborhood",
                              "full-replan")
                for r in rows), rows
-    emit(rows, "bench_replan (cold plan_hybrid vs warm ReplanEngine.replan; "
-               "gate: fig6c bandwidth scenario >=5x, step within 5%)")
-    if json_path:
-        write_json(rows, json_path)
     return rows
 
 

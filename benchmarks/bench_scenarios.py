@@ -95,9 +95,17 @@ def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
     workers = min(os.cpu_count() or 1, len(payloads))
     ceiling = calibrate_process_ceiling(workers)
     rows = [r.to_row() for r in seq_reports]
-    for row in rows:
+    for row, a, b in zip(rows, seq_reports, par_reports):
         row["parallel_speedup"] = round(speedup, 2)
         row["parallel_ceiling"] = round(ceiling, 2)
+        # structural determinism as a row field, so the CI bench-regression
+        # compare (benchmarks/compare.py) gates it even though this bench's
+        # own asserts run under continue-on-error in CI
+        row["parallel_matches_sequential"] = (
+            a.scenario == b.scenario
+            and a.adapted.timeline == b.adapted.timeline
+            and a.replans == b.replans
+            and a.switch_cost_s == b.switch_cost_s)
     emit(rows, f"bench_scenarios (catalog replay through ReplanEngine, "
                f"ReconfigCostModel switch charges; parallel sweep "
                f"{speedup:.2f}x over sequential, calibrated ceiling "

@@ -22,6 +22,7 @@ from .planner import (PlanResult, SearchStats, StrategyPoint,
                       hetero_batch_shares, materialize_plan, plan_hybrid,
                       point_lower_bound)
 from .reconfig import ReconfigCost, ReconfigCostModel, plan_sequence_dp
+from .routing import Route, RoutingTable
 from .plans import (ParallelPlan, StageAssignment, megatron_default_plan,
                     split_devices, stages_from_sizes, uniform_stages)
 from .search import (CandidateOutcome, SearchExecutor, coarse_lower_bound,

@@ -228,6 +228,10 @@ class ClusterTopology:
         # the planner simulates candidates from a thread pool and every
         # simulate call snapshots its topology — the cache must not tear
         self._snap_lock = threading.Lock()
+        # cached widest-path routing table (repro.core.routing), invalidated
+        # by the same state signature as the snapshot cache
+        self._route_table = None
+        self._route_sig: tuple | None = None
 
     # -- construction -------------------------------------------------------
 
@@ -282,6 +286,26 @@ class ClusterTopology:
 
     def total_memory(self) -> float:
         return sum(d.spec.mem_bytes for d in self.alive_devices)
+
+    # -- routing ---------------------------------------------------------------
+
+    def routing(self):
+        """Cached :class:`repro.core.routing.RoutingTable` over the *current*
+        state (alive devices, current effective edge bandwidths).
+
+        Invalidation follows the snapshot-cache signature: ``apply_event`` /
+        ``add_link`` / events assignment and direct device-field mutation
+        all produce a fresh table, so dynamic events (link death,
+        degradation, device fail/join) re-route mid-trace.  Direct edge
+        mutation is not tracked — call :meth:`invalidate_snapshots` after
+        doing that (same caveat as the snapshot cache)."""
+        from .routing import RoutingTable
+        with self._snap_lock:
+            sig = self._state_sig()
+            if self._route_table is None or self._route_sig != sig:
+                self._route_table = RoutingTable(self)
+                self._route_sig = sig
+            return self._route_table
 
     # -- temporal behaviour ---------------------------------------------------
 
@@ -352,6 +376,8 @@ class ClusterTopology:
             self._snap_sig = None
             self._snap_t = -math.inf
             self._snap_events = []
+            self._route_table = None
+            self._route_sig = None
 
     def snapshot(self, t: float) -> "ClusterTopology":
         """Deep-copied topology with all events up to time ``t`` applied.

@@ -52,16 +52,35 @@ def graph_compute_lower_bound(total_flops: float,
 # ---------------------------------------------------------------------------
 
 
+def _has_live_edge(topo: ClusterTopology, a: int, b: int) -> bool:
+    """True iff the pair has a direct link with positive effective
+    bandwidth (a fully degraded link routes like a missing one)."""
+    link = topo.link(a, b)
+    return link is not None and any(e.effective_bandwidth > 0
+                                    for e in link.edges)
+
+
 def transfer_time(topo: ClusterTopology, a: int, b: int, size: float,
-                  *, edge: Edge | None = None) -> float:
-    """T_comm(size, l_alpha): transfer over a selected physical edge."""
+                  *, edge: Edge | None = None, routing=None) -> float:
+    """T_comm(size, l_alpha): transfer over a selected physical edge.
+
+    Pairs without a live direct link are priced over the topology's widest
+    multi-hop route (:mod:`repro.core.routing`): store-and-forward, i.e.
+    the sum of per-hop latencies plus per-hop serialization — never below
+    any single hop's own time.  Unreachable pairs (partitioned cluster,
+    dead relay) price at ``inf``.  Hot loops pricing many pairs should
+    fetch ``topo.routing()`` once and pass it as ``routing`` — the cached
+    lookup re-checks the topology state signature per call."""
     if a == b:
         return 0.0
-    link = topo.link(a, b)
-    if link is None or not link.edges:
+    if edge is not None:
+        return edge.transfer_time(size)
+    if _has_live_edge(topo, a, b):
+        return topo.link(a, b).best_edge(size).transfer_time(size)
+    route = (routing if routing is not None else topo.routing()).route(a, b)
+    if route is None:
         return math.inf
-    e = edge or link.best_edge(size)
-    return e.transfer_time(size)
+    return route.transfer_time(size)
 
 
 # ---------------------------------------------------------------------------
@@ -70,21 +89,36 @@ def transfer_time(topo: ClusterTopology, a: int, b: int, size: float,
 
 
 def _bottleneck_bw(topo: ClusterTopology, ranks: Sequence[int]) -> tuple[float, float]:
-    """(bandwidth, latency) of the slowest best-edge on the participant ring."""
+    """(bandwidth, latency) of the slowest pair on the participant ring.
+
+    Pairs without a live direct link are priced at their widest route's
+    end-to-end bandwidth (``1 / sum(1/bw_hop)`` — relay hops serialize,
+    :mod:`repro.core.routing`) instead of the old flat min-cluster-bw
+    fallback, which was optimistic on sparse graphs and forced the coarse
+    search tier to disable its ring caps there.  A ring crossing a
+    partition (no route) returns bandwidth 0 — the collective is
+    unpriceable and the candidate infeasible."""
     if len(ranks) < 2:
         return math.inf, 0.0
     bw = math.inf
     lat = 0.0
     n = len(ranks)
+    table = None          # fetched once: routing() re-checks the topology
+    #                       state signature per call, too hot for this loop
     for i in range(n):
         a, b = ranks[i], ranks[(i + 1) % n]
-        link = topo.link(a, b)
-        if link is None or not link.edges:
-            # route through arbitrary path: penalize with min cluster bw
-            return max(topo.min_link_bandwidth(ranks), 1e-9), 5e-6
-        e = link.best_edge(1 << 20)
-        bw = min(bw, e.effective_bandwidth)
-        lat = max(lat, e.latency)
+        if _has_live_edge(topo, a, b):
+            e = topo.link(a, b).best_edge(1 << 20)
+            bw = min(bw, e.effective_bandwidth)
+            lat = max(lat, e.latency)
+            continue
+        if table is None:
+            table = topo.routing()
+        route = table.route(a, b)
+        if route is None:
+            return 0.0, 0.0
+        bw = min(bw, route.effective_bandwidth)
+        lat = max(lat, route.latency)
     return bw, lat
 
 

@@ -22,7 +22,10 @@ topology event; this module makes re-planning incremental:
     bandwidth  unchanged      re-score cached materialized plans (simulation
                               only — no enumeration, no layer B&B); only the
                               top-K candidates ranked by a bandwidth-adjusted
-                              estimate of their previous score are simulated.
+                              estimate of their previous score are simulated
+                              (batched through ``simulate_many`` on the
+                              shared ``SearchExecutor`` when one is
+                              attached).
     slowdown   unchanged      ReCycle-style local rebalance of the incumbent
                               (layer split + batch shares) *plus* the top-K
                               re-score above; best of both wins.
@@ -384,6 +387,10 @@ class ReplanEngine:
                                          seq=self.seq)
         except (ValueError, ZeroDivisionError):
             return None
+        if not math.isfinite(sim.step_time):
+            # unroutable transfer (partitioned cluster): the plan is
+            # infeasible, same verdict simulate_many returns
+            return None
         if ctx is not None:
             ctx.put_score(plan, sim)
         return sim
@@ -560,6 +567,49 @@ class ReplanEngine:
         chosen = ranked[:self.rescore_top_k]
         min_sims = min(self.rescore_min_sims,
                        max(1, len(ranked) // 3))
+        # With a shared SearchExecutor, the whole top-K batch (plus the
+        # incumbent) is pre-scored in worker processes through the batched
+        # simulate_many path.  The serial walk below then *consumes* the
+        # pre-computed scores, so the executor path picks the exact plans
+        # and portfolio state the serial walk would — only wall time
+        # changes.  (ROADMAP open item 3: the warm path used to simulate
+        # its top-K serially even when the harness held an executor.)
+        pre: dict[int, StepSim | None] = {}
+        if self.executor is not None and len(chosen) > 1:
+            # ship only the score-cache misses, deduplicated by structural
+            # key (the incumbent is usually the best-ranked entry): on
+            # cache-hot fingerprints the serial walk simulates ~nothing,
+            # and the executor path must not do strictly more work than it
+            walk = [(i, p) for i, (_, p, _) in enumerate(chosen)]
+            walk.append((len(chosen), inc_plan))
+            indices_by_key: dict[tuple, list[int]] = {}
+            batch: list[ParallelPlan] = []
+            for i, p in walk:
+                if ctx is not None and ctx.get_score(p) is not None:
+                    continue            # the walk reads it from ctx
+                key = p.structural_key()
+                if key not in indices_by_key:
+                    indices_by_key[key] = []
+                    batch.append(p)
+                indices_by_key[key].append(i)
+            if len(batch) > 1:
+                sims = self.executor.simulate_plans(
+                    topo, self.model, batch,
+                    global_batch=self.global_batch, seq=self.seq)
+                for p, sim in zip(batch, sims):
+                    for i in indices_by_key[p.structural_key()]:
+                        pre[i] = sim
+
+        def scored(idx: int, plan: ParallelPlan) -> StepSim | None:
+            if idx not in pre:
+                return self._simulate(plan, topo, ctx)
+            sim = ctx.get_score(plan) if ctx is not None else None
+            if sim is None:
+                sim = pre[idx]
+                if sim is not None and ctx is not None:
+                    ctx.put_score(plan, sim)
+            return sim
+
         fresh: dict[tuple[StrategyPoint, bool], StepSim] = {}
         best: tuple[float, ParallelPlan, StepSim] | None = None
         for i, (key, plan, old) in enumerate(chosen):
@@ -572,7 +622,7 @@ class ReplanEngine:
                     >= best[0] * self.rescore_stop_margin):
                 stats.pruned += len(chosen) - i
                 break
-            sim = self._simulate(plan, topo, ctx)
+            sim = scored(i, plan)
             if sim is None:
                 stats.rejected += 1
                 continue
@@ -581,7 +631,7 @@ class ReplanEngine:
             if best is None or sim.step_time < best[0]:
                 best = (sim.step_time, plan, sim)
         # the incumbent always gets re-scored, even if ranked out
-        inc_sim = self._simulate(inc_plan, topo, ctx)
+        inc_sim = scored(len(chosen), inc_plan)
         if inc_sim is not None and (best is None
                                     or inc_sim.step_time < best[0]):
             best = (inc_sim.step_time, inc_plan, inc_sim)

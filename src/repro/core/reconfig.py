@@ -42,7 +42,7 @@ from dataclasses import dataclass
 from typing import Callable, Sequence
 
 from .cluster import ClusterTopology
-from .costmodel import transfer_time
+from .costmodel import _has_live_edge, transfer_time
 from .opgraph import ModelDesc
 from .plans import ParallelPlan, split_devices, uniform_stages
 
@@ -236,6 +236,9 @@ class ReconfigCostModel:
         except ValueError:
             return {}, self.checkpoint_bytes(new)
         alive = set(topo.alive_ids())
+        # fetched once: the nearest-owner loop prices O(units x sources)
+        # pairs, too hot for routing()'s per-call signature re-check
+        table = topo.routing()
         # unit -> alive old owners (for source selection)
         owners: dict[int | str, list[int]] = {}
         for dev, units in old_map.items():
@@ -265,29 +268,39 @@ class ReconfigCostModel:
                 if need <= 0.0:
                     continue
                 srcs = [s for s in owners.get(u, ()) if s != dev]
-                if not srcs:
+                # nearest alive owner by (routed) transfer time; owners the
+                # fabric cannot reach (partitioned post-event topology) are
+                # no sources at all — those bytes come from the host store
+                timed = sorted((transfer_time(topo, s, dev, need,
+                                              routing=table), s)
+                               for s in srcs)
+                if not timed or not math.isfinite(timed[0][0]):
                     store_bytes += need
                     continue
-                src = min(srcs, key=lambda s: (transfer_time(topo, s, dev,
-                                                             need), s))
+                src = timed[0][1]
                 pair_bytes[(src, dev)] = pair_bytes.get((src, dev), 0.0) + need
         return pair_bytes, store_bytes
 
     # -- pricing ---------------------------------------------------------------
 
     @staticmethod
-    def _path_time(topo: ClusterTopology, a: int, b: int,
-                   size: float) -> tuple[float, float]:
-        """(seconds, bandwidth) for one transfer; pairs without a direct
-        link route over the cluster's bottleneck (same fallback as the
-        collective model)."""
-        t = transfer_time(topo, a, b, size)
-        if math.isfinite(t):
+    def _path_time(topo: ClusterTopology, a: int, b: int, size: float,
+                   *, routing=None) -> tuple[float, float]:
+        """(seconds, bandwidth) for one transfer.  Pairs without a live
+        direct link are priced on their widest multi-hop route's
+        store-and-forward time and end-to-end bandwidth
+        (:mod:`repro.core.routing`) — no more cluster-wide bottleneck
+        constant.  Unreachable pairs return ``(inf, 0.0)``; callers fall
+        back to the host store."""
+        if _has_live_edge(topo, a, b):
             link = topo.link(a, b)
-            bw = max(e.effective_bandwidth for e in link.edges) if link else 0.0
-            return t, bw
-        bw = max(topo.min_link_bandwidth(), 1e-9)
-        return 5e-6 + size / bw, bw
+            return (link.best_edge(size).transfer_time(size),
+                    max(e.effective_bandwidth for e in link.edges))
+        table = routing if routing is not None else topo.routing()
+        route = table.route(a, b)
+        if route is None:
+            return math.inf, 0.0
+        return route.transfer_time(size), route.effective_bandwidth
 
     def cost(self, old: ParallelPlan, new: ParallelPlan,
              topo: ClusterTopology) -> ReconfigCost:
@@ -297,8 +310,9 @@ class ReconfigCostModel:
         pair_bytes, store_bytes = self.reshard_traffic(old, new, topo)
         per_dev: dict[int, float] = {}
         bottleneck = math.inf
+        table = topo.routing() if pair_bytes else None
         for (src, dst), nbytes in sorted(pair_bytes.items()):
-            t, bw = self._path_time(topo, src, dst, nbytes)
+            t, bw = self._path_time(topo, src, dst, nbytes, routing=table)
             per_dev[src] = per_dev.get(src, 0.0) + t
             per_dev[dst] = per_dev.get(dst, 0.0) + t
             bottleneck = min(bottleneck, bw)

@@ -120,6 +120,11 @@ def _bound_context(topo: ClusterTopology, model: ModelDesc, *,
     for (a, b), link in topo.links.items():
         if a in alive and b in alive and link.edges:
             bw = max(e.effective_bandwidth for e in link.edges)
+            if bw <= 0:
+                # a fully dead link routes like a missing one
+                # (costmodel._has_live_edge) — keep the pair graph in sync
+                # so `complete` below means "every pair priced direct"
+                continue
             pair_best[(a, b)] = bw
             incident[a] = max(incident[a], bw)
             incident[b] = max(incident[b], bw)
@@ -137,11 +142,16 @@ def _bound_context(topo: ClusterTopology, model: ModelDesc, *,
     # islands must cross the inter-node fabric no matter how it is laid
     # out.
     #
-    # ALL THREE caps assume every consecutive ring pair is priced on a real
-    # link.  On a sparse link graph (TPU torus) the simulator's
-    # missing-link fallback prices the whole ring at the minimum *existing*
-    # link among the participants — which can exceed every cap above — so
-    # on incomplete graphs the only sound cap is the global best pair bw.
+    # On a sparse link graph (TPU torus) a ring pair without a direct link
+    # is priced at its widest route's end-to-end bandwidth
+    # (repro.core.routing), which never exceeds ANY hop's bandwidth.  That
+    # keeps (b) sound (a routed pair's first hop is incident to the
+    # member, so its price <= the member's best incident link) and (c)
+    # sound (every hop of every ring route with price >= B lies in the
+    # >=B subgraph, so the g members share a component there).  Cap (a)
+    # does NOT survive routing — g routed pairs may share one fast
+    # physical edge (e.g. a line graph's wrap-around pair reuses every
+    # link) — so it applies on complete graphs only.
     pair_bws = sorted(pair_best.values(), reverse=True)
     dev_bws = sorted(incident.values(), reverse=True)
     n = len(alive)
@@ -171,15 +181,17 @@ def _bound_context(topo: ClusterTopology, model: ModelDesc, *,
     for g in range(1, n + 1):
         if not pair_bws:
             ring_by_size.append(0.0)
-        elif not complete:
+        elif g == 1:
             ring_by_size.append(pair_bws[0])
         else:
-            comp = comp_bw[g] if comp_bw[g] > 0 or g == 1 else pair_bws[0]
-            pairs_crossed = g if g >= 3 else 1
-            ring_by_size.append(min(
-                pair_bws[min(pairs_crossed, len(pair_bws)) - 1],
-                dev_bws[min(g, len(dev_bws)) - 1],
-                comp if g > 1 else pair_bws[0]))
+            # comp_bw[g] == 0 means no component holds g devices: every
+            # g-ring crosses a partition and simulates to inf, so any cap
+            # is sound — 0.0 simply disables the term (still admissible)
+            caps = [dev_bws[min(g, len(dev_bws)) - 1], comp_bw[g]]
+            if complete:
+                pairs_crossed = g if g >= 3 else 1
+                caps.append(pair_bws[min(pairs_crossed, len(pair_bws)) - 1])
+            ring_by_size.append(min(caps))
     L = model.n_layers
     return _BoundCtx(
         classes=classes,
@@ -383,6 +395,19 @@ def _load_search_ctx(token: str, blob: bytes) -> tuple:
     return _CTX_STATE  # type: ignore[return-value]
 
 
+def _sim_chunk(token: str, blob: bytes,
+               items: "list[tuple[int, ParallelPlan]]"
+               ) -> "list[tuple[int, StepSim | None]]":
+    """Score one chunk of explicit (index, plan) items via the batched
+    :func:`repro.core.simulator.simulate_many` (one topology snapshot per
+    chunk).  Serves :meth:`SearchExecutor.simulate_plans` — the warm
+    bandwidth-rescore path's top-K portfolio re-simulation."""
+    topo, model, global_batch, seq = _load_search_ctx(token, blob)
+    sims = simulate_many([p for _, p in items], model, topo,
+                         global_batch=global_batch, seq=seq)
+    return [(i, sim) for (i, _), sim in zip(items, sims)]
+
+
 def _score_chunk(token: str, blob: bytes,
                  tasks: list[tuple[float, int, StrategyPoint, bool]],
                  threshold: float, tighten: bool
@@ -512,6 +537,35 @@ class SearchExecutor:
             rejected += rej
             pruned += pr
         return outcomes, rejected, pruned
+
+    def simulate_plans(self, topo: ClusterTopology, model: ModelDesc,
+                       plans: Sequence[ParallelPlan], *,
+                       global_batch: int, seq: int
+                       ) -> list[StepSim | None]:
+        """Score explicit plans across the pool (input order preserved).
+
+        Each worker chunk goes through :func:`repro.core.simulator
+        .simulate_many`, so the topology snapshot is materialized once per
+        chunk and infeasible / unroutable plans come back as ``None`` —
+        identical semantics to scoring each plan alone in the parent.  The
+        re-planning engine's warm bandwidth-rescore ships its top-K
+        portfolio through this instead of simulating serially."""
+        if not plans:
+            return []
+        pool = self._ensure()
+        blob = pickle.dumps((topo, model, global_batch, seq),
+                            protocol=pickle.HIGHEST_PROTOCOL)
+        token = hashlib.sha1(blob).hexdigest()
+        n_chunks = max(1, min(len(plans), self.n_procs))
+        chunks = [[(i, plans[i]) for i in range(c, len(plans), n_chunks)]
+                  for c in range(n_chunks)]
+        futures = [pool.submit(_sim_chunk, token, blob, chunk)
+                   for chunk in chunks if chunk]
+        out: list[StepSim | None] = [None] * len(plans)
+        for fut in as_completed(futures):
+            for i, sim in fut.result():
+                out[i] = sim
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -7,7 +7,11 @@ that predicts task execution times under the paper's constraint system:
   Eq. 5  communication       — a transfer starts after its producer finishes,
   Eq. 6  memory              — per-device residency must fit (checked statically),
   Eq. 7  bandwidth           — transfers on one physical edge-class serialize
-                               (exclusive use at rate B_alpha).
+                               (exclusive use at rate B_alpha).  Pairs without
+                               a live direct link relay hop-by-hop along the
+                               cached widest route (repro.core.routing); every
+                               relay hop claims its physical edge, so relayed
+                               traffic contends with direct traffic.
 
 Two levels are provided:
 
@@ -31,7 +35,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Mapping, Sequence
 
 from .cluster import ClusterTopology, DeviceInstance, Edge, NetworkEvent
-from .costmodel import collective_time, op_time, transfer_time
+from .costmodel import _has_live_edge, collective_time, op_time, transfer_time
 from .opgraph import CommOp, ModelDesc, OpGraph, layer_flops
 from .plans import ParallelPlan
 
@@ -113,6 +117,10 @@ def simulate_schedule(graph: OpGraph, assignment: Mapping[str, int],
     order = priority or graph.topo_order()
     rank = {n: i for i, n in enumerate(order)}
     classes = _edge_classes(topo)
+    # hoisted: the sim's topology is immutable for the whole run, so one
+    # table serves every relayed transfer (construction is O(links); the
+    # per-source widest-path trees stay lazy inside it)
+    route_table = topo.routing()
     # conflict partners share the max free_at: map tag -> sibling tags
     dev_free = {d: 0.0 for d in topo.devices}
     op_start: dict[str, float] = {}
@@ -129,16 +137,11 @@ def simulate_schedule(graph: OpGraph, assignment: Mapping[str, int],
     n_preds = {v: len(graph.preds(v)) for v in graph.nodes}
     done_preds = {v: 0 for v in graph.nodes}
 
-    def edge_ready_time(a: int, b: int, size: float,
-                        not_before: float) -> tuple[float, float, _EdgeClass | None]:
-        """(start, end, edge_class) for the best physical edge choice."""
-        if a == b:
-            return not_before, not_before, None
+    def hop_ready(a: int, b: int, size: float,
+                  not_before: float) -> tuple[float, float, _EdgeClass]:
+        """(start, end, edge_class) for the best physical edge on the
+        direct link ``a``-``b``, queueing included."""
         link = topo.link(a, b)
-        if link is None or not link.edges:
-            # no direct edge: fall back to bottleneck estimate, no queueing
-            t = transfer_time(topo, a, b, size)
-            return not_before, not_before + t, None
         key = (min(a, b), max(a, b))
         best = None
         for e in link.edges:
@@ -154,6 +157,37 @@ def simulate_schedule(graph: OpGraph, assignment: Mapping[str, int],
             if best is None or en < best[1]:
                 best = (st, en, cls)
         return best  # type: ignore[return-value]
+
+    def edge_ready_time(a: int, b: int, size: float, not_before: float
+                        ) -> tuple[float, float, list[tuple[_EdgeClass, float]]]:
+        """(start, end, claims) for one logical transfer.
+
+        Direct pairs pick the best physical edge on their link.  Pairs
+        without a live direct link relay hop-by-hop along the cached widest
+        route (:mod:`repro.core.routing`), store-and-forward: every hop
+        claims its physical edge's serialization domain, so relay traffic
+        contends with direct traffic on the same links (paper Fig. 5b
+        generalized).  ``claims`` are (edge_class, busy_until) pairs the
+        caller commits once the transfer is scheduled.  Unroutable pairs
+        (partitioned cluster) finish at ``inf``."""
+        if a == b:
+            return not_before, not_before, []
+        if _has_live_edge(topo, a, b):
+            st, en, cls = hop_ready(a, b, size, not_before)
+            return st, en, [(cls, en)]
+        route = route_table.route(a, b)
+        if route is None:
+            return not_before, math.inf, []
+        t = not_before
+        st0 = not_before
+        claims: list[tuple[_EdgeClass, float]] = []
+        for hi, (u, v) in enumerate(zip(route.path, route.path[1:])):
+            st, en, cls = hop_ready(u, v, size, t)
+            if hi == 0:
+                st0 = st
+            claims.append((cls, en))
+            t = en
+        return st0, t, claims
 
     # Kahn-style scheduling loop: repeatedly place the ready op whose device
     # is available earliest; deterministic by (ready-rank) priority.
@@ -173,10 +207,10 @@ def simulate_schedule(graph: OpGraph, assignment: Mapping[str, int],
             if du == dev:
                 arrive = max(arrive, op_end[u])
             else:
-                st, en, cls = edge_ready_time(du, dev, size,
-                                              not_before=op_end[u])  # Eq. 5
-                if cls is not None:
-                    cls.free_at = en
+                st, en, claims = edge_ready_time(du, dev, size,
+                                                 not_before=op_end[u])  # Eq. 5
+                for cls, busy_until in claims:
+                    cls.free_at = busy_until
                 xfer_end[(u, v)] = en
                 comm_bytes += size
                 comm_time += en - st
@@ -359,16 +393,22 @@ def simulate_many(plans: Sequence[ParallelPlan], model: ModelDesc,
     search worker processes amortize per-process setup across their chunk.
     Per-plan infeasibility (ValueError / ZeroDivisionError) yields ``None``
     instead of aborting the batch — identical semantics to scoring each
-    plan alone, so batched and per-plan scoring are interchangeable.
+    plan alone, so batched and per-plan scoring are interchangeable.  A
+    non-finite step time is infeasibility too: with routed transfer pricing
+    an unroutable collective or p2p hop (partitioned cluster) simulates to
+    ``inf``, and planning must reject such plans, not rank them.
     """
     snap = topo.snapshot(at_time)
     out: list[StepSim | None] = []
     for plan in plans:
         try:
-            out.append(simulate_training_step(
-                plan, model, snap, global_batch=global_batch, seq=seq))
+            sim = simulate_training_step(
+                plan, model, snap, global_batch=global_batch, seq=seq)
         except (ValueError, ZeroDivisionError):
-            out.append(None)
+            sim = None
+        if sim is not None and not math.isfinite(sim.step_time):
+            sim = None
+        out.append(sim)
     return out
 
 

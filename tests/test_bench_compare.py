@@ -1,0 +1,143 @@
+"""CI bench-regression gate (ISSUE 5 satellite): benchmarks/compare.py
+detects perturbed metrics, honors tolerances, and hard-fails structural
+gates."""
+
+import json
+
+import pytest
+
+from benchmarks.compare import (SPECS, Gate, Violation, compare_dirs,
+                                compare_rows)
+
+PS_ROW = {"topology": "hetero", "gpus": 16, "argmin_matches_exhaustive": True,
+          "parallel_matches_serial": True, "prune_rate": 0.5,
+          "pruned_coarse": 40}
+TORUS_ROW = {"topology": "tpu-torus", "gpus": 32,
+             "argmin_matches_exhaustive": True,
+             "parallel_matches_serial": True, "prune_rate": 0.6,
+             "pruned_coarse": 54}
+RP_ROW = {"model": "LLaMA_7B", "gpus": 16, "scenario": "bandwidth",
+          "path": "bandwidth-rescore", "speedup": 10.0, "quality_ok": True}
+SC_ROW = {"scenario": "cloud_spot", "seed": 0, "greedy_over_dp": 1.02,
+          "replans": 3, "adapted_over_static": 0.88,
+          "adapted_over_oracle": 1.04, "parallel_matches_sequential": True}
+
+
+def test_identical_rows_pass():
+    assert compare_rows("planner_search", [PS_ROW, TORUS_ROW],
+                        [PS_ROW, TORUS_ROW]) == []
+    assert compare_rows("bench_replan", [RP_ROW], [RP_ROW]) == []
+    assert compare_rows("bench_scenarios", [SC_ROW], [SC_ROW]) == []
+
+
+def test_structural_bool_flip_hard_fails():
+    bad = dict(TORUS_ROW, argmin_matches_exhaustive=False)
+    v = compare_rows("planner_search", [PS_ROW, TORUS_ROW], [PS_ROW, bad])
+    assert any(x.metric == "argmin_matches_exhaustive" for x in v)
+    # bench-internal gates mirrored into rows stay blocking through compare
+    # even though the bench steps run continue-on-error in CI
+    v = compare_rows("bench_replan", [RP_ROW],
+                     [dict(RP_ROW, quality_ok=False)])
+    assert [x.metric for x in v] == ["quality_ok"]
+    v = compare_rows("bench_scenarios", [SC_ROW],
+                     [dict(SC_ROW, parallel_matches_sequential=False)])
+    assert [x.metric for x in v] == ["parallel_matches_sequential"]
+
+
+def test_ratio_metric_within_tolerance_passes():
+    wobble = dict(PS_ROW, prune_rate=0.47)        # -6% < 10% tolerance
+    assert compare_rows("planner_search", [PS_ROW], [wobble]) == []
+    slow = dict(RP_ROW, speedup=4.0)              # -60% < 80% tolerance
+    assert compare_rows("bench_replan", [RP_ROW], [slow]) == []
+
+
+def test_perturbed_ratio_metric_fails():
+    """The acceptance criterion: a deliberately perturbed metric fails."""
+    degraded = dict(PS_ROW, prune_rate=0.2)       # -60% > 10% tolerance
+    v = compare_rows("planner_search", [PS_ROW], [degraded])
+    assert [x.metric for x in v] == ["prune_rate"]
+    collapsed = dict(RP_ROW, speedup=1.1)         # warm path went cold
+    v = compare_rows("bench_replan", [RP_ROW], [collapsed])
+    assert [x.metric for x in v] == ["speedup"]
+    worse = dict(SC_ROW, adapted_over_static=1.05)
+    v = compare_rows("bench_scenarios", [SC_ROW], [worse])
+    assert [x.metric for x in v] == ["adapted_over_static"]
+
+
+def test_improvements_always_pass():
+    better = dict(PS_ROW, prune_rate=0.9, pruned_coarse=120)
+    assert compare_rows("planner_search", [PS_ROW], [better]) == []
+    faster = dict(RP_ROW, speedup=40.0)
+    assert compare_rows("bench_replan", [RP_ROW], [faster]) == []
+
+
+def test_dp_le_greedy_structural_floor():
+    bad = dict(SC_ROW, greedy_over_dp=0.97)       # DP worse than greedy
+    v = compare_rows("bench_scenarios", [SC_ROW], [bad])
+    assert [x.metric for x in v] == ["greedy_over_dp"]
+
+
+def test_structural_equal_gate():
+    drifted = dict(RP_ROW, path="full-replan")
+    v = compare_rows("bench_replan", [RP_ROW], [drifted])
+    assert [x.metric for x in v] == ["path"]
+    changed = dict(SC_ROW, replans=7)
+    v = compare_rows("bench_scenarios", [SC_ROW], [changed])
+    assert [x.metric for x in v] == ["replans"]
+
+
+def test_missing_row_fails_extra_row_allowed():
+    v = compare_rows("planner_search", [PS_ROW, TORUS_ROW], [PS_ROW])
+    assert len(v) == 1 and v[0].metric == "<row>"
+    # fresh-only rows (new coverage) are not gated
+    extra = dict(PS_ROW, gpus=64)
+    assert compare_rows("planner_search", [PS_ROW], [PS_ROW, extra]) == []
+
+
+def test_nan_agreement_semantics():
+    nan_row = dict(SC_ROW, adapted_over_static=float("nan"))
+    assert compare_rows("bench_scenarios", [nan_row], [nan_row]) == []
+    v = compare_rows("bench_scenarios", [SC_ROW], [nan_row])
+    assert any(x.metric == "adapted_over_static" for x in v)
+    # min-kind gates share the agreement semantics: a legitimately
+    # non-finite baseline must not turn the gate permanently red
+    nan_dp = dict(SC_ROW, greedy_over_dp=float("nan"))
+    assert compare_rows("bench_scenarios", [nan_dp], [nan_dp]) == []
+    v = compare_rows("bench_scenarios", [SC_ROW], [nan_dp])
+    assert any(x.metric == "greedy_over_dp" for x in v)
+
+
+def test_family_summary_rows_skipped():
+    fam = {"kind": "family_summary", "scenario": "cloud_spot",
+           "adapted_over_static_mean": 0.9}
+    assert compare_rows("bench_scenarios", [SC_ROW, fam], [SC_ROW]) == []
+
+
+def test_compare_dirs_missing_fresh_file_fails(tmp_path):
+    base = tmp_path / "baselines"
+    fresh = tmp_path / "bench_out"
+    base.mkdir()
+    fresh.mkdir()
+    for spec, rows in ((SPECS["planner_search"], [PS_ROW]),
+                       (SPECS["bench_replan"], [RP_ROW]),
+                       (SPECS["bench_scenarios"], [SC_ROW])):
+        (base / spec.baseline_file).write_text(json.dumps(rows))
+        (fresh / spec.fresh_file).write_text(json.dumps(rows))
+    assert compare_dirs(base, fresh) == []
+    (fresh / SPECS["bench_replan"].fresh_file).unlink()
+    v = compare_dirs(base, fresh)
+    assert len(v) == 1 and v[0].metric == "<fresh>"
+
+
+def test_committed_baselines_parse_against_specs():
+    """The committed baselines exist, parse, and carry every gated metric —
+    the blocking CI step cannot run on an empty or drifted schema."""
+    from benchmarks.compare import BASELINE_DIR
+    for bench, spec in SPECS.items():
+        path = BASELINE_DIR / spec.baseline_file
+        assert path.exists(), path
+        rows = spec.rows(json.loads(path.read_text()))
+        assert rows, path
+        for key, row in rows.items():
+            for gate in spec.gates:
+                assert gate.metric in row, (bench, key, gate.metric)

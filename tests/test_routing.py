@@ -1,0 +1,232 @@
+"""Multi-hop routing (ISSUE 5 tentpole): widest-path selection, routed
+pricing soundness, relay contention, mid-trace re-routing, cache
+invalidation, and the executor-batched warm rescore."""
+
+import math
+
+import pytest
+
+from repro.core import (DEVICE_PROFILES, ClusterTopology, DeviceInstance,
+                        Edge, ModelDesc, NetworkEvent, OpGraph, OpNode,
+                        ReplanEngine, RoutingTable, SearchExecutor,
+                        StrategyCache, allreduce_time, hetero_cluster,
+                        multi_pod_tpu, plan_hybrid, simulate_schedule,
+                        transfer_time)
+from repro.core.routing import Route
+
+DESC = ModelDesc(name="m", n_layers=8, d_model=1024, n_heads=16,
+                 n_kv_heads=16, d_ff=4096, vocab=32000)
+
+V100 = DEVICE_PROFILES["V100"]
+
+
+def _topo(n, links):
+    """links: (a, b, bw_GBps) triples."""
+    topo = ClusterTopology([DeviceInstance(i, V100) for i in range(n)])
+    for a, b, bw in links:
+        topo.add_link(a, b, Edge(bw * 1e9, 1e-6, "link"))
+    return topo
+
+
+# ---------------------------------------------------------------------------
+# Route selection
+# ---------------------------------------------------------------------------
+
+
+def test_widest_path_prefers_fat_route():
+    # diamond: 0-1-3 over 100 GB/s links, 0-2-3 over 10 GB/s links
+    topo = _topo(4, [(0, 1, 100), (1, 3, 100), (0, 2, 10), (2, 3, 10)])
+    r = topo.routing().route(0, 3)
+    assert r.path == (0, 1, 3)
+    assert r.bottleneck_bw == pytest.approx(100e9)
+    # effective (store-and-forward) bandwidth: two equal hops halve it
+    assert r.effective_bandwidth == pytest.approx(50e9)
+
+
+def test_widest_path_tie_breaks_by_hops():
+    # two 100 GB/s routes 0->3: direct-ish 2 hops vs 3 hops
+    topo = _topo(5, [(0, 1, 100), (1, 3, 100),
+                     (0, 2, 100), (2, 4, 100), (4, 3, 100)])
+    r = topo.routing().route(0, 3)
+    assert r.hops == 2
+
+
+def test_route_reverse_is_exact_mirror():
+    topo = multi_pod_tpu(pods=2, chips_per_pod=16)
+    rt = topo.routing()
+    fwd = rt.route(3, 21)
+    rev = rt.route(21, 3)
+    assert rev.path == tuple(reversed(fwd.path))
+    assert rev.bottleneck_bw == fwd.bottleneck_bw
+    assert rev.transfer_time(1e9) == fwd.transfer_time(1e9)
+
+
+def test_dead_edges_and_devices_not_routable():
+    topo = _topo(3, [(0, 1, 100), (1, 2, 100)])
+    assert topo.routing().route(0, 2) is not None
+    # link death (bandwidth -> 0) removes the hop from the live graph
+    topo.apply_event(NetworkEvent(0.0, "bandwidth", factor=0.0))
+    assert topo.routing().route(0, 2) is None
+    topo.apply_event(NetworkEvent(0.0, "bandwidth", factor=1.0))
+    assert topo.routing().route(0, 2) is not None
+    # a dead relay device is not routable either
+    topo.apply_event(NetworkEvent(0.0, "fail", device_id=1))
+    assert topo.routing().route(0, 2) is None
+
+
+# ---------------------------------------------------------------------------
+# Routed pricing
+# ---------------------------------------------------------------------------
+
+
+def test_routed_price_never_below_any_hop():
+    """A routed transfer costs at least every single hop's own
+    serialization-aware time (store-and-forward, no pipelining)."""
+    topo = _topo(4, [(0, 1, 100), (1, 2, 25), (2, 3, 50)])
+    size = 1e9
+    routed = transfer_time(topo, 0, 3, size)
+    assert math.isfinite(routed)
+    hops = [transfer_time(topo, a, b, size) for a, b in ((0, 1), (1, 2),
+                                                         (2, 3))]
+    assert routed == pytest.approx(sum(hops))
+    for h in hops:
+        assert routed >= h
+
+
+def test_direct_link_wins_over_route():
+    # the route selection rule: a live direct link is always taken, routing
+    # applies only where none exists
+    topo = _topo(3, [(0, 1, 100), (1, 2, 100), (0, 2, 10)])
+    t = transfer_time(topo, 0, 2, 1e9)
+    assert t == pytest.approx(1e-6 + 1e9 / 10e9)
+
+
+def test_disconnected_pair_prices_inf_and_planning_rejects():
+    topo = _topo(4, [(0, 1, 100), (2, 3, 100)])   # two islands
+    assert transfer_time(topo, 0, 2, 1e9) == math.inf
+    with pytest.raises(RuntimeError):
+        plan_hybrid(topo, DESC, global_batch=8, seq=256,
+                    with_baseline=False)
+    # and the exhaustive reference agrees (no silent optimistic plans)
+    with pytest.raises(RuntimeError):
+        plan_hybrid(topo, DESC, global_batch=8, seq=256,
+                    with_baseline=False, prune=False)
+
+
+def test_routed_ring_collective_slower_than_direct():
+    """A ring whose pairs relay over shared links must price above the
+    same ring on a complete graph of equal link speed."""
+    chain = _topo(3, [(0, 1, 100), (1, 2, 100)])
+    full = _topo(3, [(0, 1, 100), (1, 2, 100), (0, 2, 100)])
+    ranks = [0, 1, 2]
+    assert allreduce_time(chain, 1e9, ranks) > allreduce_time(full, 1e9, ranks)
+
+
+# ---------------------------------------------------------------------------
+# Relay contention in the discrete-event simulator
+# ---------------------------------------------------------------------------
+
+
+def test_relay_hops_contend_with_direct_traffic():
+    """A relayed transfer claims every physical edge on its route, so it
+    serializes with direct traffic on the same link (Fig. 5b generalized)."""
+    topo = _topo(3, [(0, 1, 100), (1, 2, 100)])
+    g = OpGraph()
+    g.add(OpNode("a", "mm", flops=1e9, out_bytes=100e9))   # 0 -> 1 direct
+    g.add(OpNode("b", "mm", flops=1e9, out_bytes=100e9))   # 0 -> 2 relayed
+    g.add(OpNode("c", "mm", flops=1e9))
+    g.add(OpNode("d", "mm", flops=1e9))
+    g.connect("a", "c")
+    g.connect("b", "d")
+    res = simulate_schedule(g, {"a": 0, "b": 0, "c": 1, "d": 2}, topo)
+    # both 1s transfers need edge (0,1): the relayed one queues behind (or
+    # ahead of) the direct one, then pays its second hop
+    assert res.makespan >= 3.0 - 1e-6
+
+
+def test_dead_relay_forces_reroute_mid_trace():
+    """Events re-route: the fast relay dies mid-trace and traffic falls
+    back to the slow path — via the same snapshot/version invalidation the
+    rest of the temporal machinery uses."""
+    topo = _topo(4, [(0, 1, 100), (1, 3, 100), (0, 2, 10), (2, 3, 10)])
+    topo.events = [NetworkEvent(5.0, "fail", device_id=1)]
+    before = topo.snapshot(4.0)
+    after = topo.snapshot(6.0)
+    assert before.routing().route(0, 3).path == (0, 1, 3)
+    assert after.routing().route(0, 3).path == (0, 2, 3)
+    assert transfer_time(after, 0, 3, 1e9) > transfer_time(before, 0, 3, 1e9)
+
+
+# ---------------------------------------------------------------------------
+# Cache invalidation
+# ---------------------------------------------------------------------------
+
+
+def test_route_cache_invalidation_matches_rebuild():
+    """After any event, topo.routing() equals a from-scratch RoutingTable
+    on every pair (the cached table never serves stale routes)."""
+    topo = _topo(5, [(0, 1, 100), (1, 2, 50), (2, 3, 100), (3, 4, 25),
+                     (0, 4, 10)])
+    events = [NetworkEvent(0.0, "bandwidth", factor=0.2),
+              NetworkEvent(0.0, "fail", device_id=2),
+              NetworkEvent(0.0, "join", device_id=2),
+              NetworkEvent(0.0, "bandwidth", factor=4.0, mode="scale")]
+    ids = range(5)
+    for ev in events:
+        topo.apply_event(ev)
+        cached = topo.routing()
+        fresh = RoutingTable(topo)
+        for a in ids:
+            for b in ids:
+                rc, rf = cached.route(a, b), fresh.route(a, b)
+                if rf is None:
+                    assert rc is None, (ev, a, b)
+                else:
+                    assert rc == rf, (ev, a, b)
+
+
+def test_routing_table_identity_is_cached():
+    topo = _topo(3, [(0, 1, 100), (1, 2, 100)])
+    assert topo.routing() is topo.routing()
+    topo.apply_event(NetworkEvent(0.0, "bandwidth", factor=0.5))
+    t2 = topo.routing()
+    assert t2 is topo.routing()
+    topo.invalidate_snapshots()
+    assert topo.routing() is not t2
+
+
+# ---------------------------------------------------------------------------
+# Executor-batched warm rescore (ISSUE 5 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_warm_rescore_executor_matches_serial():
+    """The bandwidth-rescore path batched through simulate_many on the
+    shared SearchExecutor picks the exact plan the serial walk does."""
+    topo = hetero_cluster({"V100": 8}, intra_bw_map={"V100": 25e9},
+                          inter_bw=12.5e9, gpus_per_node=4)
+    ev = NetworkEvent(1.0, "bandwidth", factor=0.2)
+
+    def replay(executor):
+        t = topo.copy()
+        engine = ReplanEngine(DESC, global_batch=32, seq=1024,
+                              cache=StrategyCache(), executor=executor)
+        engine.plan(t)
+        t.apply_event(ev)
+        return engine.replan(t, ev)
+
+    serial = replay(None)
+    with SearchExecutor(n_procs=2) as ex:
+        par = replay(ex)
+    assert par.path == serial.path == "bandwidth-rescore"
+    assert par.plan.to_json() == serial.plan.to_json()
+    assert par.predicted.step_time == serial.predicted.step_time
+    assert par.stats.explored == serial.stats.explored
+
+
+def test_route_dataclass_basics():
+    r = Route(path=(0, 1, 2), bottleneck_bw=100e9, latency=2e-6,
+              resistance=2 / 100e9)
+    assert r.hops == 2
+    assert r.effective_bandwidth == pytest.approx(50e9)
+    assert r.transfer_time(1e9) == pytest.approx(2e-6 + 2e9 / 100e9)

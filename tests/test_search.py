@@ -5,13 +5,24 @@ import math
 
 import pytest
 
-from repro.core import (ModelDesc, SearchExecutor, StrategyCache,
+from repro.core import (ClusterTopology, DEVICE_PROFILES, DeviceInstance,
+                        Edge, ModelDesc, SearchExecutor, StrategyCache,
                         coarse_lower_bound, enumerate_strategies,
                         hetero_cluster, homogeneous_cluster,
                         materialize_variant, multi_pod_tpu, plan_hybrid,
                         point_feasible, point_lower_bound, score_candidates,
                         simulate_training_step)
 from repro.core.planner import SearchStats
+
+
+def line_cluster(n=4, spec="V100", bw=50e9):
+    """Chain topology: device i linked only to i+1 — every non-adjacent
+    pair is multi-hop routed."""
+    devs = [DeviceInstance(i, DEVICE_PROFILES[spec]) for i in range(n)]
+    topo = ClusterTopology(devs)
+    for i in range(n - 1):
+        topo.add_link(i, i + 1, Edge(bw, 1e-6, "link"))
+    return topo
 
 DESC = ModelDesc(name="m", n_layers=12, d_model=1024, n_heads=16,
                  n_kv_heads=16, d_ff=4096, vocab=32000)
@@ -22,9 +33,10 @@ CLUSTERS = [
     ("homo", lambda: homogeneous_cluster(8, "V100", gpus_per_node=8)),
     ("slowlink", lambda: hetero_cluster({"V100": 8}, inter_bw=5e9,
                                         gpus_per_node=4)),
-    # sparse link graph: the simulator's missing-link fallback can price a
-    # ring optimistically, so the bound must drop its ring caps here
+    # sparse link graphs: missing-link pairs are multi-hop routed, and the
+    # bound keeps its incident/connectivity ring caps (ISSUE 5)
     ("torus", lambda: multi_pod_tpu(pods=2, chips_per_pod=16)),
+    ("line", lambda: line_cluster(4)),
     # unique fastest pair: a 2-member ring crosses only ONE pair, so the
     # g-th-largest pair cap must not apply at g=2 (review regression)
     ("unique-fast-pair", lambda: hetero_cluster({"H100": 2, "RTX4090D": 2},
@@ -220,6 +232,18 @@ if _HAS_HYPOTHESIS:
         inter = draw(st.sampled_from([5e9, 25e9, 100e9]))
         topo = hetero_cluster(kinds, inter_bw=inter,
                               gpus_per_node=draw(st.sampled_from([2, 4])))
+        # ISSUE 5: randomized sparse / partitioned link graphs.  Dropping an
+        # arbitrary link subset leaves multi-hop-routed pairs (and possibly
+        # disconnected partitions); the cascade must stay exact — or reject
+        # planning entirely, matching exhaustive — under routed pricing.
+        keys = sorted(topo.links)
+        if len(keys) > 1 and draw(st.booleans()):
+            for k in draw(st.sets(st.sampled_from(keys),
+                                  max_size=len(keys) - 1)):
+                del topo.links[k]
+            # direct dict mutation is not tracked by the state signature —
+            # the topology contract requires an explicit invalidation
+            topo.invalidate_snapshots()
         gb = draw(st.sampled_from([4, 8, 16]))
         return model, topo, gb
 
