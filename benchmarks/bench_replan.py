@@ -68,6 +68,8 @@ def _event_and_topo(scenario: str, n: int):
 
 
 def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
+    """Run the warm-vs-cold replan rows, emit CSV/JSON, enforce the
+    path/quality gates.  Returns the rows."""
     configs = [("LLaMA_7B", 32, 128), ("GPT_13B", 16, 64),
                ("GPT_22B", 16, 64)]
     if quick:

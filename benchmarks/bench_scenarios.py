@@ -80,6 +80,8 @@ def _payloads(quick: bool) -> list[tuple[HarnessConfig, str, int]]:
 
 
 def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
+    """Replay every scenario family, emit CSV/JSON, enforce the
+    adaptability + determinism gates.  Returns the rows."""
     payloads = _payloads(quick)
 
     t0 = time.perf_counter()

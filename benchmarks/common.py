@@ -72,10 +72,14 @@ def write_json(rows: list[dict], path: str) -> None:
 
 
 def emit(rows: list[dict], title: str) -> str:
-    """Print a small CSV block (one per paper table/figure)."""
+    """Print a small CSV block (one per paper table/figure).  Rows may be
+    heterogeneous (a bench mixing row families, e.g. flat vs fleet rows):
+    the header is the union of keys in encounter order, absent cells
+    render empty."""
     buf = io.StringIO()
     if rows:
-        w = csv.DictWriter(buf, fieldnames=list(rows[0]))
+        fields = list(dict.fromkeys(k for r in rows for k in r))
+        w = csv.DictWriter(buf, fieldnames=fields, restval="")
         w.writeheader()
         w.writerows(rows)
     out = f"# {title}\n{buf.getvalue()}"

@@ -47,6 +47,8 @@ BASELINE_DIR = Path(__file__).resolve().parent / "baselines"
 
 @dataclass(frozen=True)
 class Violation:
+    """One gate failure: which bench, row, metric, and why."""
+
     bench: str
     row_key: tuple
     metric: str
@@ -65,6 +67,9 @@ class Gate:
       * ``bool-true``  — structural: fresh must be truthy.
       * ``equal``      — structural: fresh must equal the baseline exactly.
       * ``min``        — structural floor: fresh >= ``floor``.
+      * ``max``        — absolute ceiling: fresh <= ``ceil`` (wall-time
+                         budgets; the ceiling is host-independent slack,
+                         not a ratio against the committed baseline).
       * ``ratio-min``  — fresh >= baseline * (1 - tol): regressions that
                          shrink the metric fail; improvements always pass.
       * ``ratio-max``  — fresh <= baseline * (1 + tol): the mirror image.
@@ -77,6 +82,7 @@ class Gate:
     kind: str
     tol: float = 0.0
     floor: float = 0.0
+    ceil: float = math.inf
 
     def check(self, base, fresh) -> str | None:
         """Violation detail string, or None when the gate passes."""
@@ -96,6 +102,13 @@ class Gate:
                 return None
             if ff is None or not math.isfinite(ff) or ff < self.floor:
                 return f"{fresh!r} < floor {self.floor}"
+            return None
+        if self.kind == "max":
+            if ff is not None and bf is not None \
+                    and not math.isfinite(bf) and not math.isfinite(ff):
+                return None
+            if ff is None or not math.isfinite(ff) or ff > self.ceil:
+                return f"{fresh!r} > ceiling {self.ceil}"
             return None
         if ff is None or bf is None:
             return f"non-numeric ({base!r} vs {fresh!r})"
@@ -157,6 +170,18 @@ SPECS: dict[str, BenchSpec] = {
             # or tier drift without demanding bit-equality across refactors
             Gate("prune_rate", "ratio-min", tol=0.10),
             Gate("pruned_coarse", "ratio-min", tol=0.50),
+            # hierarchical island tier (ISSUE 6): on every flat-tractable
+            # row the hierarchical entry point must fall back to the flat
+            # cascade and return the identical plan byte-for-byte
+            Gate("hierarchical_matches_flat", "bool-true"),
+            # fleet rows: the partition and its symmetry structure are
+            # deterministic; the planning wall-time carries an absolute
+            # budget (acceptance: 4096 devices end-to-end < 30 s — the 60 s
+            # ceiling is 2x slack for slower CI hosts)
+            Gate("path", "equal"),
+            Gate("n_islands", "equal"),
+            Gate("islands_deduped", "equal"),
+            Gate("hier_wall_s", "max", ceil=60.0),
         ),
     ),
     "bench_replan": BenchSpec(
@@ -211,9 +236,12 @@ def compare_rows(bench: str, baseline: list[dict],
                                  "baseline row missing from fresh run"))
             continue
         for gate in spec.gates:
-            if gate.metric not in brow and gate.kind in ("equal", "ratio-min",
-                                                         "ratio-max"):
-                continue                     # metric not in this baseline yet
+            if gate.metric not in brow:
+                # metric not in this baseline row: either the row kind does
+                # not carry it (fleet rows vs flat rows share one spec) or
+                # the baseline predates the metric — in both cases gating
+                # fresh-only values would force lock-step baseline bumps
+                continue
             detail = gate.check(brow.get(gate.metric), frow.get(gate.metric))
             if detail is not None:
                 out.append(Violation(bench, key, gate.metric, detail))
@@ -225,6 +253,8 @@ def compare_rows(bench: str, baseline: list[dict],
 
 def compare_dirs(baseline_dir: Path | str = BASELINE_DIR,
                  fresh_dir: Path | str = "bench_out") -> list[Violation]:
+    """All violations across every spec'd bench; missing baseline or
+    fresh JSON files are violations themselves."""
     baseline_dir, fresh_dir = Path(baseline_dir), Path(fresh_dir)
     out: list[Violation] = []
     for bench, spec in SPECS.items():
@@ -246,6 +276,7 @@ def compare_dirs(baseline_dir: Path | str = BASELINE_DIR,
 
 
 def main(argv: list[str] | None = None) -> int:
+    """CLI entry point: exit 1 on any violation."""
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline-dir", default=str(BASELINE_DIR))
     ap.add_argument("--fresh-dir", default="bench_out")

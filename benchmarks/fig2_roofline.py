@@ -26,6 +26,7 @@ def attention_op(batch: int, seq: int, heads: int = 32, hd: int = 128,
 
 
 def run() -> list[dict]:
+    """Reproduce the Fig. 2 roofline table; returns the rows."""
     rows = []
     for dev_name in ("H100", "V100"):
         spec = DEVICE_PROFILES[dev_name]

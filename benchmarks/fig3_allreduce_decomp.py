@@ -23,6 +23,8 @@ SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 
 def run() -> list[dict]:
+    """Reproduce the Fig. 3 allreduce-decomposition comparison;
+    returns the rows."""
     rows = []
     for n, label in ((8, "nvlink-node"), (16, "two-nodes-ib")):
         topo = homogeneous_cluster(n, "V100", gpus_per_node=8)

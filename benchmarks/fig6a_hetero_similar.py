@@ -16,6 +16,8 @@ SIZES = (8, 16, 32, 256)
 
 
 def run(quick: bool = False) -> list[dict]:
+    """Reproduce the Fig. 6a similar-devices hetero rows; returns
+    the rows."""
     rows = []
     sizes = SIZES[:2] if quick else SIZES
     models = list(PAPER_MODELS.items())[:2] if quick else PAPER_MODELS.items()

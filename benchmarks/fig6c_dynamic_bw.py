@@ -24,6 +24,8 @@ TP_PAIRS = {"LLaMA_7B": (2, 4, 8), "GPT_13B": (4, 8, 16),
 
 
 def tp_plans(desc, topo, n, tp, gb):
+    """Candidate TP-degree plans the dynamic-bandwidth sweep switches
+    between."""
     plans = []
     for pp in (1, 2, 4, 8):
         dp, rem = divmod(n, tp * pp)
@@ -50,6 +52,8 @@ def step_time(engine, plans, topo):
 
 
 def run(quick: bool = False) -> list[dict]:
+    """Reproduce the Fig. 6c dynamic-bandwidth adaptation sweep;
+    returns the rows."""
     rows = []
     items = list(TP_PAIRS.items())[:2] if quick else list(TP_PAIRS.items())
     for name, (tp_lo, tp_hi, n) in items:

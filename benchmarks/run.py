@@ -12,6 +12,7 @@ import traceback
 
 
 def main() -> None:
+    """Run every registered benchmark module in sequence."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small cluster sizes only")

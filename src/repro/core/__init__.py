@@ -10,8 +10,12 @@ from .costmodel import (MeshCollectiveModel, allreduce_time, collective_time,
                         graph_compute_lower_bound, op_time, transfer_time)
 from .dynamic import (AdaptationRecord, DynamicOrchestrator, PlanTemplates,
                       reassign_for_straggler)
-from .engine import (CacheStats, ReplanEngine, ReplanResult, StrategyCache,
-                     TopologyFingerprint, fingerprint_topology)
+from .engine import (CacheStats, HierarchicalReplanEngine,
+                     HierarchicalReplanResult, ReplanEngine, ReplanResult,
+                     StrategyCache, TopologyFingerprint, fingerprint_topology)
+from .islands import (ComposedPlan, HierarchicalResult, Island, IslandPlan,
+                      inter_island_sync_bound, partition_islands,
+                      plan_hierarchical, remap_plan)
 from .opgraph import (CommOp, ModelDesc, OpGraph, OpNode, allreduce_decomposed,
                       allreduce_naive, build_llm_graph, layer_costs,
                       layer_flops)

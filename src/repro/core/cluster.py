@@ -307,6 +307,122 @@ class ClusterTopology:
                 self._route_sig = sig
             return self._route_table
 
+    # -- islands (hierarchical search, repro.core.islands) ---------------------
+
+    def island_partition(self, *, fast_frac: float = 0.5
+                         ) -> list[tuple[int, ...]]:
+        """Partition the alive devices into homogeneous *islands*.
+
+        An island is a maximal set of same-class devices connected by *fast*
+        links: within each device class, a link counts as fast when its best
+        live edge reaches at least ``fast_frac`` times the fastest live
+        same-class link bandwidth.  Slower links (and every cross-class
+        link) become inter-island edges.  On a multi-pod TPU fleet the
+        12.5 GB/s DCI edges fall under half the 50 GB/s ICI links, so each
+        pod is one island; in a mixed GPU cluster each device class splits
+        further wherever its nodes only meet over the slow fabric.
+
+        Args:
+            fast_frac: fraction of the per-class maximum link bandwidth a
+                link must reach to be island-internal (0 < fast_frac <= 1).
+
+        Returns:
+            Sorted-id tuples, one per island, ordered by smallest member id.
+            Every alive device appears in exactly one island; devices whose
+            class has no live intra-class link form single-device islands.
+        """
+        by_class: dict[str, list[int]] = {}
+        for d in self.alive_devices:
+            by_class.setdefault(d.spec.name, []).append(d.device_id)
+        out: list[tuple[int, ...]] = []
+        for name in sorted(by_class):
+            ids = sorted(by_class[name])
+            idset = set(ids)
+            pair_bw: dict[tuple[int, int], float] = {}
+            for (a, b), link in self.links.items():
+                if a in idset and b in idset and link.edges:
+                    bw = max(e.effective_bandwidth for e in link.edges)
+                    if bw > 0:
+                        pair_bw[(a, b)] = bw
+            parent = {i: i for i in ids}
+
+            def find(x: int) -> int:
+                while parent[x] != x:
+                    parent[x] = parent[parent[x]]
+                    x = parent[x]
+                return x
+
+            if pair_bw:
+                thresh = fast_frac * max(pair_bw.values())
+                for (a, b), bw in pair_bw.items():
+                    if bw >= thresh:
+                        ra, rb = find(a), find(b)
+                        if ra != rb:
+                            parent[max(ra, rb)] = min(ra, rb)
+            comps: dict[int, list[int]] = {}
+            for i in ids:
+                comps.setdefault(find(i), []).append(i)
+            out.extend(tuple(sorted(c)) for c in comps.values())
+        out.sort(key=lambda ids: ids[0])
+        return out
+
+    def island_signature(self, ids: Sequence[int], *, bw_quant: float = 0.25,
+                         perf_quant: float = 0.05) -> tuple:
+        """Canonical id-free signature of the sub-cluster over ``ids``.
+
+        Two islands with equal signatures hold the same multiset of
+        (device class, quantized perf factor), the same multiset of
+        internal (edge tag, log2-quantized bandwidth) edges, and the same
+        internal link-degree sequence — i.e. they are indistinguishable to
+        the planner up to device renaming (identical pods, identical DGX
+        nodes).  The hierarchical search scores one representative per
+        signature and reuses its sub-plan for the twins.
+
+        Args:
+            ids: member device ids (alive or not; order irrelevant).
+            bw_quant: bandwidth bucket width in log2(bytes/s), matching
+                :func:`repro.core.engine.fingerprint_topology`.
+            perf_quant: linear bucket width for device perf factors.
+
+        Returns:
+            A hashable tuple; equality means "isomorphic for planning".
+        """
+        idset = set(ids)
+        devs = sorted(
+            (self.devices[i].spec.name,
+             int(round(self.devices[i].perf_factor / perf_quant)))
+            for i in idset)
+        edges = []
+        degree = {i: 0 for i in idset}
+        for (a, b), link in self.links.items():
+            if a in idset and b in idset:
+                for e in link.edges:
+                    bw = e.effective_bandwidth
+                    bucket = int(round(math.log2(bw) / bw_quant)) \
+                        if bw > 0 else -1
+                    edges.append((e.tag, bucket))
+                if link.edges:
+                    degree[a] += 1
+                    degree[b] += 1
+        return (len(idset), tuple(devs), tuple(sorted(edges)),
+                tuple(sorted(degree.values())))
+
+    def subtopology(self, ids: Iterable[int]) -> "ClusterTopology":
+        """Deep-copied topology restricted to ``ids``: the member devices
+        (current perf/alive state) plus every link whose endpoints are both
+        members.  The event timeline is NOT carried over — snapshot first if
+        a particular time matters.  The hierarchical planner searches each
+        island on its subtopology."""
+        idset = set(ids)
+        devs = [replace(d) for i, d in sorted(self.devices.items())
+                if i in idset]
+        links = {
+            k: MultiEdgeLink(v.a, v.b, [replace(e) for e in v.edges])
+            for k, v in self.links.items()
+            if k[0] in idset and k[1] in idset
+        }
+        return ClusterTopology(devs, links, events=[])
+
     # -- temporal behaviour ---------------------------------------------------
 
     def events_between(self, t0: float, t1: float) -> list[NetworkEvent]:

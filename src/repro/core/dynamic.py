@@ -125,6 +125,10 @@ def reassign_for_straggler(plan: ParallelPlan, model: ModelDesc,
 
 @dataclass
 class AdaptationRecord:
+    """One adaptation taken by the orchestrator: the triggering event, the
+    action chosen (keep / switch variant), and the step-time before/after
+    plus the modeled plan-switch charge."""
+
     time: float
     event: NetworkEvent
     action: str

@@ -121,6 +121,9 @@ def fingerprint_topology(topo: ClusterTopology, *, bw_quant: float = 0.25,
 
 @dataclass
 class CacheStats:
+    """Session-wide :class:`StrategyCache` telemetry: lookup hits/misses
+    across every context plus LRU evictions."""
+
     hits: int = 0
     misses: int = 0
     evictions: int = 0
@@ -338,6 +341,8 @@ class ReplanEngine:
         self.global_batch = global_batch
         self.seq = seq
         self.cache = cache if cache is not None else StrategyCache()
+        # deprecated, kept for call-site compatibility: serial scoring needs
+        # no thread pool; process parallelism comes from ``executor``
         self.n_workers = n_workers
         # a repro.core.search.SearchExecutor: full searches then score their
         # final simulation tier in worker processes (plan identity with the
@@ -516,7 +521,7 @@ class ReplanEngine:
                                  gpus_per_node=self.gpus_per_node)
         res = plan_hybrid(topo, self.model, global_batch=self.global_batch,
                           seq=self.seq, gpus_per_node=self.gpus_per_node,
-                          n_workers=self.n_workers, with_baseline=False,
+                          with_baseline=False,
                           max_candidates=self.max_candidates,
                           cache=self.cache, executor=self.executor,
                           top_k=self.plan_top_k)
@@ -534,7 +539,20 @@ class ReplanEngine:
 
         Classifies the actual delta — device set changed vs parameters-only —
         rather than trusting ``event.kind`` alone, and dispatches per the
-        decision table in the module docstring."""
+        decision table in the module docstring.
+
+        Args:
+            topo: the cluster with the event ALREADY applied (the caller
+                applies events; the engine only reads the current state).
+            event: the triggering :class:`NetworkEvent`, used as a routing
+                hint (slowdown -> straggler path, bandwidth -> re-score
+                ratio); ``None`` falls back to fingerprint classification.
+
+        Returns:
+            A :class:`ReplanResult`; ``path`` names the chosen warm/cold
+            path, ``kept`` whether switch-cost hysteresis retained the
+            incumbent.  The incumbent and history are updated in place.
+        """
         if self.incumbent is None or self._device_key is None:
             return self.plan(topo)
         fp = self.cache.fingerprint(topo)
@@ -701,7 +719,7 @@ class ReplanEngine:
                     res = plan_hybrid(
                         topo, self.model, global_batch=self.global_batch,
                         seq=self.seq, gpus_per_node=self.gpus_per_node,
-                        n_workers=self.n_workers, with_baseline=False,
+                        with_baseline=False,
                         max_candidates=self.max_candidates, cache=self.cache,
                         points=neigh, allow_subset=False,
                         incumbent_bound=best[0], executor=self.executor)
@@ -771,7 +789,7 @@ class ReplanEngine:
                 res = plan_hybrid(
                     topo, self.model, global_batch=self.global_batch,
                     seq=self.seq, gpus_per_node=self.gpus_per_node,
-                    n_workers=self.n_workers, with_baseline=False,
+                    with_baseline=False,
                     max_candidates=self.max_candidates, cache=self.cache,
                     points=neigh, allow_subset=False,
                     executor=self.executor)
@@ -797,7 +815,7 @@ class ReplanEngine:
         bound = inc_sim.step_time if inc_sim is not None else None
         res = plan_hybrid(topo, self.model, global_batch=self.global_batch,
                           seq=self.seq, gpus_per_node=self.gpus_per_node,
-                          n_workers=self.n_workers, with_baseline=False,
+                          with_baseline=False,
                           max_candidates=self.max_candidates,
                           cache=self.cache, incumbent_bound=bound,
                           executor=self.executor)
@@ -812,6 +830,8 @@ class ReplanEngine:
     # -- telemetry -------------------------------------------------------------
 
     def describe(self) -> str:
+        """One-paragraph status: plan counts, cache hit rate, and the last
+        few :class:`ReplanResult` rows (path, latency, step time, work)."""
         cs = self.cache.stats
         lines = [f"ReplanEngine: {len(self.history)} plans "
                  f"({sum(1 for r in self.history if not r.cold)} warm), "
@@ -824,3 +844,239 @@ class ReplanEngine:
                 f"explored {r.stats.explored:4d} pruned {r.stats.pruned:4d} "
                 f"rejected {r.stats.rejected:3d}")
         return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical re-planning (island-routed, ISSUE 6)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class HierarchicalReplanResult:
+    """Outcome of one hierarchical plan/replan.
+
+    ``islands_replanned`` lists the island indices whose per-island engine
+    actually ran (empty when only the inter-island composition was
+    refreshed, e.g. a DCI-only bandwidth event); ``island_results`` maps
+    those indices to the inner :class:`ReplanResult`.  ``flat_result`` is
+    set instead when the cluster was small enough for the flat engine."""
+
+    path: str
+    step_time: float
+    inter_sync_s: float
+    wall_time: float
+    islands_replanned: tuple[int, ...] = ()
+    island_results: dict = None  # type: ignore[assignment]
+    flat_result: ReplanResult | None = None
+
+    def __post_init__(self) -> None:
+        if self.island_results is None:
+            self.island_results = {}
+
+
+class HierarchicalReplanEngine:
+    """Island-routed incremental re-planner for fleet-scale clusters.
+
+    Wraps :func:`repro.core.islands.plan_hierarchical` the way
+    :class:`ReplanEngine` wraps ``plan_hybrid``: :meth:`plan` establishes
+    the composed incumbent, :meth:`replan` routes each
+    :class:`NetworkEvent` to the narrowest sound scope —
+
+    ========== ================================================================
+    event      re-plan scope
+    ========== ================================================================
+    slowdown   only the island containing the device (its per-island
+               :class:`ReplanEngine` runs its warm straggler path on the
+               island's subtopology), then recompose.
+    bandwidth  only islands holding an *intra-island* edge matching the
+               event selector; a selector touching exclusively inter-island
+               fabric (e.g. ``"dci"``) replans nothing and just recomputes
+               the inter-island sync bound on the updated topology.
+    fail/join  full repartition + hierarchical re-plan (island membership
+               may shift); sub-searches stay warm through the shared
+               :class:`StrategyCache`.
+    ========== ================================================================
+
+    Small clusters / single-island partitions delegate to one inner flat
+    :class:`ReplanEngine`, preserving its decision table unchanged.
+    Batch shares are rebalanced only on full (re-)plans: a degraded island
+    keeps its share between full plans, and the composed estimate reflects
+    the hit through the max over island step times.
+    """
+
+    def __init__(self, model: ModelDesc, *, global_batch: int, seq: int,
+                 cache: StrategyCache | None = None, executor=None,
+                 flat_limit: int | None = None, fast_frac: float = 0.5,
+                 gpus_per_node: int = 8,
+                 max_candidates: int | None = None,
+                 max_sims: int | None = None):
+        from .islands import DEFAULT_FLAT_LIMIT
+        self.model = model
+        self.global_batch = global_batch
+        self.seq = seq
+        self.cache = cache if cache is not None else StrategyCache()
+        self.executor = executor
+        self.flat_limit = DEFAULT_FLAT_LIMIT if flat_limit is None \
+            else flat_limit
+        self.fast_frac = fast_frac
+        self.gpus_per_node = gpus_per_node
+        self.max_candidates = max_candidates
+        self.max_sims = max_sims
+        # per-island warm engines, keyed by the island's device-id tuple;
+        # created lazily on the first event routed to that island
+        self._engines: dict[tuple[int, ...], ReplanEngine] = {}
+        # island device-id tuple -> current IslandPlan (composition state)
+        self._plans: dict[tuple[int, ...], object] = {}
+        self._flat: ReplanEngine | None = None
+        self.history: list[HierarchicalReplanResult] = []
+
+    # -- cold path -------------------------------------------------------------
+
+    def _flat_engine(self) -> ReplanEngine:
+        if self._flat is None:
+            self._flat = ReplanEngine(
+                self.model, global_batch=self.global_batch, seq=self.seq,
+                cache=self.cache, executor=self.executor,
+                max_candidates=self.max_candidates,
+                gpus_per_node=self.gpus_per_node)
+        return self._flat
+
+    def _wrap_flat(self, inner: ReplanResult) -> HierarchicalReplanResult:
+        res = HierarchicalReplanResult(
+            path="flat:" + inner.path, step_time=inner.predicted.step_time,
+            inter_sync_s=0.0, wall_time=inner.wall_time,
+            flat_result=inner)
+        self.history.append(res)
+        return res
+
+    def plan(self, topo: ClusterTopology) -> HierarchicalReplanResult:
+        """Full hierarchical (or flat-fallback) plan; establishes the
+        composed incumbent and the island -> sub-plan state.
+
+        Returns a :class:`HierarchicalReplanResult`; raises
+        ``RuntimeError`` when no feasible plan exists (partitioned or
+        undersized cluster)."""
+        from .islands import partition_islands, plan_hierarchical
+        t0 = time.perf_counter()
+        islands = partition_islands(topo, fast_frac=self.fast_frac)
+        if len(topo.alive_ids()) <= self.flat_limit or len(islands) <= 1:
+            self._plans, self._engines = {}, {}
+            return self._wrap_flat(self._flat_engine().plan(topo))
+        hres = plan_hierarchical(
+            topo, self.model, global_batch=self.global_batch, seq=self.seq,
+            flat_limit=self.flat_limit, fast_frac=self.fast_frac,
+            gpus_per_node=self.gpus_per_node,
+            max_candidates=self.max_candidates, max_sims=self.max_sims,
+            cache=self.cache, executor=self.executor)
+        assert hres.composed is not None
+        self._plans = {ip.island.device_ids: ip
+                       for ip in hres.composed.islands}
+        self._engines = {}
+        res = HierarchicalReplanResult(
+            path="hierarchical:cold",
+            step_time=hres.composed.step_time,
+            inter_sync_s=hres.composed.inter_sync_s,
+            wall_time=time.perf_counter() - t0,
+            islands_replanned=tuple(ip.island.index
+                                    for ip in hres.composed.islands))
+        self.history.append(res)
+        return res
+
+    # -- warm path -------------------------------------------------------------
+
+    def _engine_for(self, topo: ClusterTopology, ip) -> ReplanEngine:
+        """The island's warm engine, lazily seeded with the island's
+        current sub-plan as incumbent (portfolio starts empty: warm paths
+        always re-score the incumbent, so the seed suffices)."""
+        key = ip.island.device_ids
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = ReplanEngine(
+                self.model, global_batch=ip.batch, seq=self.seq,
+                cache=self.cache, executor=self.executor,
+                max_candidates=self.max_candidates,
+                gpus_per_node=self.gpus_per_node)
+            eng.incumbent = (ip.plan, ip.predicted)
+            eng._device_key = self.cache.fingerprint(
+                topo.subtopology(key)).device_key
+            self._engines[key] = eng
+        return eng
+
+    def _intra_island_tags(self, topo: ClusterTopology
+                           ) -> dict[tuple[int, ...], set[str]]:
+        """Edge tags appearing on links internal to each composed island
+        (one pass over the link table)."""
+        member: dict[int, tuple[int, ...]] = {}
+        for key in self._plans:
+            for d in key:
+                member[d] = key
+        tags: dict[tuple[int, ...], set[str]] = {k: set()
+                                                 for k in self._plans}
+        for (a, b), link in topo.links.items():
+            ka, kb = member.get(a), member.get(b)
+            if ka is not None and ka is kb:
+                tags[ka].update(e.tag for e in link.edges)
+        return tags
+
+    def _compose(self, topo: ClusterTopology) -> tuple[float, float]:
+        from .islands import inter_island_sync_bound
+        ids = [ip.island.device_ids for ip in self._plans.values()]
+        inter = inter_island_sync_bound(topo, ids, self.model) \
+            if len(ids) > 1 else 0.0
+        step = max(ip.predicted.step_time
+                   for ip in self._plans.values()) + inter
+        return step, inter
+
+    def replan(self, topo: ClusterTopology,
+               event: NetworkEvent | None = None
+               ) -> HierarchicalReplanResult:
+        """Re-plan after ``event`` on the (already updated) topology,
+        touching only the affected island(s) — see the class docstring's
+        routing table.
+
+        Args:
+            topo: the cluster with the event ALREADY applied.
+            event: the triggering event; ``None`` (or a device-set change)
+                repartitions via :meth:`plan`.
+
+        Returns:
+            A :class:`HierarchicalReplanResult` with the refreshed composed
+            step estimate; per-island inner results in ``island_results``.
+        """
+        if not self._plans:
+            if self._flat is not None and self._flat.incumbent is not None:
+                return self._wrap_flat(self._flat.replan(topo, event))
+            return self.plan(topo)
+        if event is None or event.kind in ("fail", "join"):
+            return self.plan(topo)
+        t0 = time.perf_counter()
+        from .islands import IslandPlan
+        if event.kind == "slowdown":
+            targets = [ip for ip in self._plans.values()
+                       if event.device_id in ip.island.device_ids]
+            if not targets:
+                return self.plan(topo)   # unknown device: repartition
+        else:  # bandwidth
+            tags = self._intra_island_tags(topo)
+            targets = [ip for ip in self._plans.values()
+                       if event.selector is None
+                       or event.selector in tags[ip.island.device_ids]]
+        results: dict[int, ReplanResult] = {}
+        for ip in targets:
+            eng = self._engine_for(topo, ip)
+            inner = eng.replan(topo.subtopology(ip.island.device_ids),
+                               event)
+            results[ip.island.index] = inner
+            self._plans[ip.island.device_ids] = IslandPlan(
+                island=ip.island, plan=inner.plan,
+                predicted=inner.predicted, batch=ip.batch, searched=True)
+        step, inter = self._compose(topo)
+        paths = sorted({r.path for r in results.values()}) or ["recompose"]
+        res = HierarchicalReplanResult(
+            path="hierarchical:" + "+".join(paths),
+            step_time=step, inter_sync_s=inter,
+            wall_time=time.perf_counter() - t0,
+            islands_replanned=tuple(sorted(results)),
+            island_results=results)
+        self.history.append(res)
+        return res

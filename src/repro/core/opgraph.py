@@ -322,6 +322,9 @@ def _ssm_flops(m: ModelDesc, batch: int, seq: int) -> float:
 
 def layer_flops(m: ModelDesc, i: int, batch: int, seq: int,
                 *, kv_len: int | None = None) -> float:
+    """Forward FLOPs of layer ``i`` at the given batch/seq (attention,
+    FFN, SSM or hybrid per ``m.layer_kind``); ``kv_len`` prices decode
+    steps against a longer KV cache."""
     kind = m.layer_kind(i)
     if kind == "mamba":
         f = _ssm_flops(m, batch, seq)

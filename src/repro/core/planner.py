@@ -30,6 +30,7 @@ import heapq
 import itertools
 import math
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Iterable, Mapping, Sequence
@@ -49,6 +50,15 @@ from .simulator import (StepSim, memory_feasible, simulate_schedule,
 
 @dataclass
 class SearchStats:
+    """Search telemetry, shared by every planner entry point.
+
+    ``explored``/``pruned``/``infeasible`` count enumeration/B&B work;
+    the ``pruned_*``/``simulated``/``budget_skipped`` block is the tiered
+    cascade's per-(point, refine)-candidate accounting (all sharing the
+    :attr:`cascade_candidates` denominator); ``cache_hits``/``cache_misses``
+    tell warm resolution apart from real simulator work.  Mutated in place
+    by :func:`repro.core.search.score_candidates`."""
+
     explored: int = 0
     pruned: int = 0
     infeasible: int = 0
@@ -73,12 +83,17 @@ class SearchStats:
     # denominator; ``cache_hits``/``cache_misses`` tell warm resolution
     # apart from real simulator work).
     simulated: int = 0
+    # candidates skipped by the ``max_sims`` anytime budget — NOT soundly
+    # pruned (one of them might have been the argmin); nonzero only when a
+    # caller bounds the final tier (the hierarchical island searches do)
+    budget_skipped: int = 0
 
     @property
     def cascade_candidates(self) -> int:
         """Candidates that entered the cascade (all tiers' denominator)."""
         return (self.pruned_feasibility + self.pruned_bound
-                + self.pruned_coarse + self.simulated + self.rejected)
+                + self.pruned_coarse + self.simulated + self.rejected
+                + self.budget_skipped)
 
     @property
     def prune_rate(self) -> float:
@@ -373,6 +388,13 @@ def _divisors(n: int) -> list[int]:
 
 @dataclass(frozen=True)
 class StrategyPoint:
+    """One point in the hybrid-parallel strategy lattice: the degrees of
+    data/tensor/pipeline/expert parallelism, the microbatch count, and the
+    gradient-sync schedule (``"rs_ag"`` decomposed vs ``"allreduce"``
+    naive).  Materialization (device grouping, layer split, batch shares)
+    happens later in :func:`materialize_plan` — a point is the cascade's
+    unit of pruning, hashable and cheap to enumerate."""
+
     dp: int
     tp: int
     pp: int
@@ -434,6 +456,11 @@ def enumerate_strategies(topo: ClusterTopology, model: ModelDesc, *,
 
 @dataclass
 class PlanResult:
+    """Everything :func:`plan_hybrid` returns: the argmin plan with its
+    simulated step time, the optional Megatron baselines (literal default
+    and tuned-uniform), per-tier :class:`SearchStats`, and the distinct
+    ``top_k`` best plans for downstream candidate widening."""
+
     plan: ParallelPlan
     predicted: StepSim
     candidates_evaluated: int
@@ -587,7 +614,8 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
                 incumbent_bound: float | None = None,
                 points: Sequence[StrategyPoint] | None = None,
                 executor=None, top_k: int = 1,
-                prune: bool = True) -> PlanResult:
+                prune: bool = True,
+                max_sims: int | None = None) -> PlanResult:
     """End-to-end planning: resolve the candidate set (cache / enumeration /
     Oobleck-style degrade), then hand it to the tiered search pipeline in
     :mod:`repro.core.search` — feasibility check, analytic bound, coarse
@@ -595,37 +623,63 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
     statistics.  This is a thin wrapper; the score loop lives in
     :func:`repro.core.search.score_candidates`.
 
-    ``allow_subset``: when no feasible (dp, tp, pp) factorization exists for
-    the exact alive-device count (e.g. 7 survivors after a failure), retire
-    the slowest devices until one does — the Oobleck-style degrade path.
+    Args:
+        topo: the cluster, current state (apply events / snapshot first).
+        model: the workload description.
+        global_batch: total samples per optimizer step.
+        seq: sequence length.
+        gpus_per_node: node size assumed by enumeration heuristics and the
+            Megatron baselines (part of the cache-context identity).
+        n_workers: **deprecated and ignored** — serial scoring needs no
+            thread pool (the GIL made one useless); process parallelism
+            comes from ``executor``.  Passing a non-``None`` value emits a
+            :class:`DeprecationWarning`.
+        with_baseline: also score the Megatron default + tuned-uniform
+            baselines (fills ``baseline*`` / ``tuned_baseline*``).
+        max_candidates: cap on the enumerated candidate list (default
+            :data:`DEFAULT_MAX_CANDIDATES`).
+        allow_subset: when no feasible (dp, tp, pp) factorization exists
+            for the exact alive-device count (e.g. 7 survivors after a
+            failure), retire the slowest devices until one does — the
+            Oobleck-style degrade path.
+        cache: a :class:`repro.core.engine.StrategyCache` (duck-typed — any
+            object with a ``context(topo, model, global_batch, seq)``
+            method).  Enumeration output, materialized plans and simulator
+            scores are then memoized per topology fingerprint, so
+            re-planning after a dynamic event only pays for what changed.
+        incumbent_bound: a known-achievable step time (the incumbent
+            plan's score); candidates whose analytic lower bounds already
+            meet it are cut before materialization/simulation.
+        points: pre-seeded candidate list (the re-planning engine passes
+            the incumbent's neighborhood); skips enumeration entirely.
+        executor: a :class:`repro.core.search.SearchExecutor` — the final
+            simulation tier then runs in worker processes (the serial and
+            parallel paths pick byte-identical plans).
+        top_k: how many distinct best plans to report in
+            :attr:`PlanResult.top_plans`; the cascade keeps pruning sound
+            for the full top-``k`` set, not just the argmin.
+        prune: ``False`` disables tiers 0-2 and exhaustively simulates
+            every candidate (the soundness reference for tests/benchmarks).
+        max_sims: anytime budget on fully scored candidates (best-bound
+            first; see ``score_candidates``).  NOT sound — the argmin
+            identity is waived when it binds.  Used by the hierarchical
+            island tier to bound fleet-scale sub-searches.
 
-    ``cache``: a :class:`repro.core.engine.StrategyCache` (duck-typed — any
-    object with a ``context(topo, model, global_batch, seq)`` method).  When
-    given, enumeration output, materialized plans and simulator scores are
-    memoized per topology fingerprint, so re-planning after a dynamic event
-    only pays for what actually changed.
+    Returns:
+        A :class:`PlanResult` holding the argmin plan, its simulated
+        :class:`~repro.core.simulator.StepSim`, baselines and search stats.
 
-    ``incumbent_bound``: a known-achievable step time (the incumbent plan's
-    score); candidates whose analytic lower bounds already meet it are cut
-    before materialization/simulation.
-
-    ``points``: pre-seeded candidate list (the re-planning engine passes the
-    incumbent's neighborhood); skips enumeration entirely.
-
-    ``executor``: a :class:`repro.core.search.SearchExecutor` — the final
-    simulation tier then runs in worker processes (the serial and parallel
-    paths pick byte-identical plans).  ``n_workers`` is accepted for
-    backward compatibility but ignored: serial scoring needs no thread pool
-    (the GIL made one useless), process parallelism comes from ``executor``.
-
-    ``top_k``: how many distinct best plans to report in
-    :attr:`PlanResult.top_plans`; the cascade keeps pruning sound for the
-    full top-``k`` set, not just the argmin.  ``prune=False`` disables
-    tiers 0-2 and exhaustively simulates every candidate (the soundness
-    reference used by tests/benchmarks).
+    Raises:
+        RuntimeError: no candidate survived scoring ("no feasible plan
+            found") — undersized/partitioned cluster, or a batch that no
+            factorization divides.
     """
     from . import search as search_mod  # deferred: search imports planner
-    del n_workers
+    if n_workers is not None:
+        warnings.warn(
+            "plan_hybrid(n_workers=...) is ignored; pass "
+            "executor=SearchExecutor(...) for process-parallel scoring",
+            DeprecationWarning, stacklevel=2)
     t0 = time.perf_counter()
     if max_candidates is None:
         max_candidates = DEFAULT_MAX_CANDIDATES
@@ -675,7 +729,7 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
     scored = search_mod.score_candidates(
         topo, model, global_batch=global_batch, seq=seq, points=points,
         ctx=ctx, incumbent_bound=incumbent_bound, keep_top_k=max(1, top_k),
-        executor=executor, prune=prune, stats=stats)
+        executor=executor, prune=prune, stats=stats, max_sims=max_sims)
     if not scored:
         raise RuntimeError("no feasible plan found")
     best = scored[0]

@@ -130,6 +130,9 @@ def uniform_stages(n_layers: int, pp: int,
 
 def stages_from_sizes(sizes: Sequence[int],
                       device_groups: Sequence[Sequence[int]]) -> tuple[StageAssignment, ...]:
+    """Build stage assignments from per-stage layer counts: stage ``s``
+    holds the next ``sizes[s]`` consecutive layers on
+    ``device_groups[s]``."""
     stages = []
     start = 0
     for s, size in enumerate(sizes):

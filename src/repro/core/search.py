@@ -580,13 +580,23 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
                      keep_top_k: int = 1,
                      executor: SearchExecutor | None = None,
                      prune: bool = True,
-                     stats: SearchStats | None = None
+                     stats: SearchStats | None = None,
+                     max_sims: int | None = None
                      ) -> list[CandidateOutcome]:
     """Run the staged pruning cascade over ``points`` and return every fully
     simulated candidate, sorted by ``(step_time, canonical index)`` — the
     head is the argmin, the first ``keep_top_k`` distinct plans are the
     sound top-k.  ``stats`` (mutated in place) accumulates the per-tier
-    pruned counts."""
+    pruned counts.
+
+    ``max_sims`` is an *anytime* budget: at most that many candidates are
+    fully scored (best-bound-first — the most promising candidates by the
+    tier-2 estimate go first), and the unscored tail is counted in
+    ``stats.budget_skipped``.  Unlike the pruning tiers the budget is NOT
+    sound: a skipped candidate might have been the argmin, so the
+    serial == parallel and cascade == exhaustive identities are waived when
+    it binds.  The hierarchical island tier (:mod:`repro.core.islands`)
+    uses it to keep fleet-scale sub-searches bounded."""
     if stats is None:
         stats = SearchStats()
     variants = (True, False) if topo.is_heterogeneous() else (False,)
@@ -656,6 +666,13 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
         cut = len(pending) - len(live)
         stats.pruned_coarse += cut
         stats.pruned += cut
+        if max_sims is not None:
+            budget = max(0, max_sims - len(sim_times))
+            if len(live) > budget:
+                # tasks are bound-sorted: the kept prefix is the most
+                # promising; the tail is skipped, not (soundly) pruned
+                stats.budget_skipped += len(live) - budget
+                live = live[:budget]
         if live:
             out, rejected, pruned = executor.run(
                 topo, model, global_batch=global_batch, seq=seq,
@@ -672,6 +689,9 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
     else:
         memo: dict = {}
         for bound, index, point, refine in tasks:
+            if max_sims is not None and len(sim_times) >= max_sims:
+                stats.budget_skipped += 1
+                continue
             thr = threshold()
             if prune and bound > thr:
                 # attribute the cut to the tier whose bound did it

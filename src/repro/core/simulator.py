@@ -46,6 +46,10 @@ from .plans import ParallelPlan
 
 @dataclass
 class SimResult:
+    """Outcome of one discrete-event schedule simulation: end-to-end
+    makespan, per-op start/end times, per-device busy time and aggregate
+    communication volume/time."""
+
     makespan: float
     op_start: dict[str, float]
     op_end: dict[str, float]
@@ -94,6 +98,8 @@ def check_memory(graph: OpGraph, assignment: Mapping[str, int],
 
 def memory_feasible(graph: OpGraph, assignment: Mapping[str, int],
                     topo: ClusterTopology, *, headroom: float = 0.95) -> bool:
+    """True when every device's working set under ``assignment`` fits in
+    ``headroom`` of its memory (see :func:`check_memory`)."""
     for dev, used in check_memory(graph, assignment, topo).items():
         if used > topo.device(dev).spec.mem_bytes * headroom:
             return False
@@ -414,6 +420,9 @@ def simulate_many(plans: Sequence[ParallelPlan], model: ModelDesc,
 
 def allreduce_like(topo: ClusterTopology, size: float, ranks: Sequence[int],
                    *, decomposed: bool) -> float:
+    """Gradient-sync collective time over ``ranks`` (ring allreduce, or
+    the decomposed reduce-scatter + all-gather when ``decomposed``);
+    thin forwarding wrapper over :func:`repro.core.costmodel.allreduce_time`."""
     from .costmodel import allreduce_time
     return allreduce_time(topo, size, ranks, decomposed=decomposed)
 
@@ -483,6 +492,10 @@ def _1f1b_order(S: int, s: int, M: int) -> list[tuple[str, int]]:
 
 @dataclass
 class EpochSim:
+    """Epoch-level simulation outcome: total wall time over ``steps``
+    optimizer steps, the per-step times, and the re-plan count plus total
+    modeled reconfiguration charge."""
+
     total_time: float
     steps: int
     step_times: list[float]

@@ -1,0 +1,227 @@
+"""Hierarchical island search (ISSUE 6): partition, symmetry dedup,
+composition, flat fallback, event-routed hierarchical replanning, and the
+cascade's anytime simulation budget."""
+
+import math
+
+import pytest
+
+from repro.core import (HierarchicalReplanEngine, ModelDesc, NetworkEvent,
+                        hetero_cluster, homogeneous_cluster, multi_pod_tpu,
+                        partition_islands, plan_hierarchical, plan_hybrid,
+                        remap_plan)
+from repro.core.islands import _quantize_shares
+
+DESC = ModelDesc(name="m", n_layers=12, d_model=1024, n_heads=16,
+                 n_kv_heads=16, d_ff=4096, vocab=32000)
+
+
+# ---------------------------------------------------------------------------
+# Partition
+# ---------------------------------------------------------------------------
+
+
+def test_partition_multi_pod_one_island_per_pod():
+    topo = multi_pod_tpu(pods=2, chips_per_pod=16)
+    islands = partition_islands(topo)
+    assert len(islands) == 2
+    assert [isl.device_ids for isl in islands] == \
+        [tuple(range(16)), tuple(range(16, 32))]
+    # isomorphic pods: identical canonical signatures
+    assert islands[0].signature == islands[1].signature
+
+
+def test_partition_never_mixes_device_classes():
+    topo = hetero_cluster({"RTX4090D": 8, "V100": 8}, gpus_per_node=4)
+    islands = partition_islands(topo)
+    seen: list[int] = []
+    for isl in islands:
+        classes = {topo.device(i).spec.name for i in isl.device_ids}
+        assert len(classes) == 1, isl
+        seen.extend(isl.device_ids)
+    assert sorted(seen) == topo.alive_ids()
+
+
+def test_single_device_island_plans_end_to_end():
+    # one lone RTX: no same-class peer, so it forms a singleton island
+    topo = hetero_cluster({"RTX4090D": 1, "V100": 4}, gpus_per_node=4)
+    islands = partition_islands(topo)
+    assert any(isl.n == 1 for isl in islands)
+    res = plan_hierarchical(topo, DESC, global_batch=40, seq=512,
+                            flat_limit=0)
+    assert res.path == "hierarchical"
+    assert math.isfinite(res.predicted_step)
+    assert sum(ip.batch for ip in res.composed.islands) == 40
+
+
+def test_signature_distinguishes_degraded_twin():
+    topo = multi_pod_tpu(pods=2, chips_per_pod=16)
+    sig0 = topo.island_signature(range(16))
+    topo.apply_event(NetworkEvent(time=0.0, kind="slowdown", device_id=3,
+                                  factor=0.5))
+    assert topo.island_signature(range(16)) != sig0
+    assert topo.island_signature(range(16, 32)) == sig0
+
+
+# ---------------------------------------------------------------------------
+# Flat fallback + failure modes
+# ---------------------------------------------------------------------------
+
+
+def test_homogeneous_cluster_falls_back_to_flat_identically():
+    topo = homogeneous_cluster(8, "V100")
+    res = plan_hierarchical(topo, DESC, global_batch=32, seq=1024)
+    ref = plan_hybrid(topo, DESC, global_batch=32, seq=1024,
+                      with_baseline=False)
+    assert res.path == "flat"
+    assert res.islands_deduped == 0
+    assert res.flat.plan.to_json() == ref.plan.to_json()
+    assert res.predicted_step == ref.predicted.step_time
+
+
+def test_partitioned_cluster_raises_runtime_error():
+    topo = multi_pod_tpu(pods=2, chips_per_pod=16)
+    topo.apply_event(NetworkEvent(time=0.0, kind="bandwidth",
+                                  selector="dci", factor=0.0))
+    with pytest.raises(RuntimeError, match="partitioned"):
+        plan_hierarchical(topo, DESC, global_batch=64, seq=512,
+                          flat_limit=0)
+
+
+def test_batch_smaller_than_island_count_raises():
+    topo = multi_pod_tpu(pods=2, chips_per_pod=16)
+    with pytest.raises(RuntimeError, match="batch"):
+        plan_hierarchical(topo, DESC, global_batch=1, seq=512,
+                          flat_limit=0)
+
+
+# ---------------------------------------------------------------------------
+# Symmetry dedup + composition
+# ---------------------------------------------------------------------------
+
+
+def test_isomorphic_islands_searched_exactly_once():
+    topo = multi_pod_tpu(pods=2, chips_per_pod=16)
+    res = plan_hierarchical(topo, DESC, global_batch=64, seq=512,
+                            flat_limit=0)
+    assert res.path == "hierarchical"
+    assert res.n_islands == 2
+    assert res.n_signatures == 1
+    assert res.islands_deduped == 1
+    searched = [ip for ip in res.composed.islands if ip.searched]
+    reused = [ip for ip in res.composed.islands if not ip.searched]
+    assert len(searched) == 1 and len(reused) == 1
+    # the twin reuses the representative's structure on its own devices
+    assert reused[0].plan.meta.get("island_remapped") is True
+    assert set(d for st in reused[0].plan.stages for d in st.device_ids) \
+        <= set(reused[0].island.device_ids)
+    # equal shares for equal pods, and the composed estimate adds a
+    # strictly positive inter-island sync term
+    assert searched[0].batch == reused[0].batch == 32
+    assert res.composed.inter_sync_s > 0.0
+    assert res.composed.step_time == pytest.approx(
+        max(ip.predicted.step_time for ip in res.composed.islands)
+        + res.composed.inter_sync_s)
+
+
+def test_remap_plan_rewrites_ids_and_marks_meta():
+    topo = multi_pod_tpu(pods=2, chips_per_pod=16)
+    res = plan_hierarchical(topo, DESC, global_batch=64, seq=512,
+                            flat_limit=0)
+    rep = next(ip for ip in res.composed.islands if ip.searched)
+    mapping = {i: i + 16 for i in range(16)}
+    remapped = remap_plan(rep.plan, mapping)
+    assert remapped.meta["island_remapped"] is True
+    for st_old, st_new in zip(rep.plan.stages, remapped.stages):
+        assert st_new.layers == st_old.layers
+        assert st_new.device_ids == tuple(d + 16 for d in st_old.device_ids)
+
+
+def test_quantize_shares_properties():
+    # equal weights, even division -> equal shares
+    shares, unit = _quantize_shares([1.0, 1.0], 64)
+    assert shares == [32, 32] and 64 % unit == 0
+    # proportionality with exact sum and a floor of one unit each
+    shares, unit = _quantize_shares([3.0, 1.0, 0.0001], 256)
+    assert sum(shares) == 256
+    assert all(s >= unit for s in shares)
+    assert shares[0] > shares[1] > 0
+    with pytest.raises(RuntimeError):
+        _quantize_shares([1.0, 1.0, 1.0], 2)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical replanning (event routing)
+# ---------------------------------------------------------------------------
+
+
+def _fleet_engine():
+    topo = multi_pod_tpu(pods=2, chips_per_pod=16)
+    eng = HierarchicalReplanEngine(DESC, global_batch=64, seq=512,
+                                   flat_limit=0)
+    cold = eng.plan(topo)
+    assert cold.path == "hierarchical:cold"
+    return topo, eng, cold
+
+
+def test_slowdown_replans_only_containing_island():
+    topo, eng, _ = _fleet_engine()
+    ev = NetworkEvent(time=1.0, kind="slowdown", device_id=3, factor=0.5)
+    topo.apply_event(ev)
+    res = eng.replan(topo, ev)
+    assert res.path.startswith("hierarchical:")
+    assert res.islands_replanned == (0,)
+    assert set(res.island_results) == {0}
+
+
+def test_inter_island_bandwidth_event_recomposes_without_search():
+    topo, eng, cold = _fleet_engine()
+    ev = NetworkEvent(time=1.0, kind="bandwidth", selector="dci",
+                      factor=0.5)
+    topo.apply_event(ev)
+    res = eng.replan(topo, ev)
+    # "dci" never appears inside an island, so no sub-search runs: only
+    # the inter-island sync bound is recomputed (halved bw -> doubled)
+    assert res.islands_replanned == ()
+    assert res.path == "hierarchical:recompose"
+    assert res.inter_sync_s == pytest.approx(2 * cold.inter_sync_s,
+                                             rel=1e-6)
+
+
+def test_fail_event_triggers_full_repartition():
+    topo, eng, _ = _fleet_engine()
+    ev = NetworkEvent(time=1.0, kind="fail", device_id=31)
+    topo.apply_event(ev)
+    res = eng.replan(topo, ev)
+    assert res.path == "hierarchical:cold"
+    assert 31 not in {d for key in eng._plans for d in key}
+
+
+def test_small_cluster_delegates_to_flat_engine():
+    topo = homogeneous_cluster(8, "V100")
+    eng = HierarchicalReplanEngine(DESC, global_batch=32, seq=512)
+    res = eng.plan(topo)
+    assert res.path.startswith("flat:")
+    assert res.flat_result is not None and res.inter_sync_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Cascade budget + deprecation (satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_max_sims_budget_bounds_simulations():
+    topo = homogeneous_cluster(16, "V100")
+    res = plan_hybrid(topo, DESC, global_batch=64, seq=512,
+                      with_baseline=False, max_sims=4)
+    st = res.search_stats
+    assert st.simulated <= 4
+    assert st.budget_skipped > 0
+    assert math.isfinite(res.predicted.step_time)
+
+
+def test_plan_hybrid_n_workers_deprecated():
+    topo = homogeneous_cluster(4, "V100")
+    with pytest.warns(DeprecationWarning, match="executor"):
+        plan_hybrid(topo, DESC, global_batch=16, seq=512,
+                    with_baseline=False, n_workers=2)

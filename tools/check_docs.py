@@ -1,0 +1,110 @@
+"""Docs gate (ISSUE 6 satellite): intra-repo markdown links must resolve
+and the ``repro.core`` public API must be documented.
+
+Two stdlib-only checks, run by the CI ``docs`` job and locally via::
+
+    python tools/check_docs.py
+
+1. **Link check** — every relative link in ``README.md``, ``docs/*.md``
+   and the other repo-root markdown files must point at an existing file
+   (anchors are stripped; ``http(s)``/``mailto`` targets are skipped — CI
+   must not depend on external availability).
+2. **Docstring check** — every public module, class and function defined
+   at module level under ``src/repro/core`` (plus ``benchmarks`` and
+   ``tools``) must carry a docstring.  Names with a leading underscore are
+   private and exempt.  The gate covers the planner core — the paper's
+   contribution and this repo's public API — not the auxiliary training
+   stack (``repro.models``, ``repro.launch``, ...), which predates the
+   gate; widen ``PY_ROOTS`` as those layers get audited.
+
+Exit code 1 with a per-violation listing on any failure.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — target up to the first whitespace or closing paren;
+# images (![alt](src)) match the same pattern and are checked too
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+MD_ROOTS = ("README.md", "ROADMAP.md", "CHANGES.md", "PAPER.md",
+            "PAPERS.md", "ISSUE.md", "SNIPPETS.md")
+DOC_DIRS = ("docs",)
+PY_ROOTS = ("src/repro/core", "benchmarks", "tools")
+
+
+def check_links() -> list[str]:
+    """Broken relative links in the repo's markdown, as violation strings."""
+    files: list[Path] = [REPO / n for n in MD_ROOTS if (REPO / n).exists()]
+    for d in DOC_DIRS:
+        files.extend(sorted((REPO / d).glob("**/*.md")))
+    out: list[str] = []
+    for md in files:
+        for m in _LINK.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                out.append(f"{md.relative_to(REPO)}: broken link -> "
+                           f"{target}")
+    return out
+
+
+def _missing_docstrings(py: Path) -> list[str]:
+    tree = ast.parse(py.read_text(), filename=str(py))
+    rel = py.relative_to(REPO)
+    out: list[str] = []
+    if ast.get_docstring(tree) is None:
+        out.append(f"{rel}: missing module docstring")
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            if node.name.startswith("_"):
+                continue
+            if ast.get_docstring(node) is None:
+                kind = "class" if isinstance(node, ast.ClassDef) \
+                    else "function"
+                out.append(f"{rel}:{node.lineno}: public {kind} "
+                           f"{node.name} has no docstring")
+    return out
+
+
+def check_docstrings() -> list[str]:
+    """Undocumented public module-level defs/classes, as violation
+    strings."""
+    out: list[str] = []
+    for root in PY_ROOTS:
+        base = REPO / root
+        if not base.exists():
+            continue
+        for py in sorted(base.glob("**/*.py")):
+            if py.name == "__main__.py":
+                continue
+            out.extend(_missing_docstrings(py))
+    return out
+
+
+def main() -> int:
+    """Run both checks; print violations; exit 1 on any."""
+    violations = check_links() + check_docstrings()
+    if violations:
+        print(f"[docs] FAIL: {len(violations)} violation(s)")
+        for v in violations:
+            print(f"  {v}")
+        return 1
+    print("[docs] PASS: links resolve, public API documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
