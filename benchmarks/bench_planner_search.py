@@ -31,6 +31,14 @@ dedup + the ``max_sims`` anytime budget) and gate on the partition shape,
 the dedup count, and an absolute end-to-end wall budget (< 30 s at 4096
 devices, the ISSUE 6 acceptance bar).
 
+The hetero/16 row additionally measures **tracing overhead** (ISSUE 7):
+the serial cascade runs again untraced and twice traced into a live
+:class:`repro.obs.Obs` bundle; ``trace_overhead`` is the min-of-2 traced
+wall over the min-of-2 untraced wall, gated at <= 1.10x by
+``benchmarks.compare``.  ``--trace PATH`` writes the traced run's combined
+Perfetto trace (+ a standalone metrics snapshot next to it) for the CI
+artifact.
+
 Gates: the cascade's argmin must equal the exhaustive argmin byte-for-byte,
 the parallel plan must equal the serial plan byte-for-byte, the
 hierarchical entry point must match the serial plan on every flat row, the
@@ -42,7 +50,8 @@ parallel search must reach >= 2x over serial.  On shared-hyperthread /
 2-vCPU containers the speedup is reported, not asserted (same policy as
 the PR 2 scenario-sweep gate).
 
-PYTHONPATH=src python -m benchmarks.bench_planner_search [--quick] [--json P]
+PYTHONPATH=src python -m benchmarks.bench_planner_search \\
+    [--quick] [--json P] [--trace P]
 """
 
 from __future__ import annotations
@@ -52,6 +61,7 @@ import time
 
 from repro.core import (SearchExecutor, enumerate_strategies, hetero_cluster,
                         multi_pod_tpu, plan_hierarchical, plan_hybrid)
+from repro.obs import Obs, write_metrics, write_trace
 from benchmarks.common import (PAPER_MODELS, calibrate_process_ceiling, emit,
                                write_json)
 
@@ -87,10 +97,14 @@ def _fleet_configs(quick: bool):
             ("multi-pod", 4096, 16, 256)]
 
 
-def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
+def run(quick: bool = False, json_path: str | None = None,
+        trace_path: str | None = None) -> list[dict]:
     """Run every row family, emit CSV/JSON, then enforce the gates
-    described in the module docstring.  Returns the rows."""
+    described in the module docstring.  Returns the rows.  With
+    ``trace_path`` the hetero/16 traced run's Perfetto trace (and a
+    ``*_metrics.json`` snapshot next to it) are written there."""
     rows = []
+    trace_obs: Obs | None = None
     desc = PAPER_MODELS["LLaMA_7B"]
     procs = min(os.cpu_count() or 1, 8)
     ceiling = calibrate_process_ceiling(procs)
@@ -120,6 +134,23 @@ def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
                                      seq=2048, max_candidates=128)
             t_hier = time.perf_counter() - t0
 
+            # tracing-overhead measurement (ISSUE 7), on the gated
+            # hetero/16 row only: min-of-2 walls on both sides keep
+            # shared-runner scheduling noise out of the gated ratio
+            trace_overhead = None
+            if topology == "hetero" and n == 16:
+                t0 = time.perf_counter()
+                plan_hybrid(topo, desc, **kw)
+                untraced = min(t_ser, time.perf_counter() - t0)
+                traced = float("inf")
+                for _ in range(2):
+                    tobs = Obs()
+                    t0 = time.perf_counter()
+                    plan_hybrid(topo, desc, obs=tobs, **kw)
+                    traced = min(traced, time.perf_counter() - t0)
+                    trace_obs = tobs
+                trace_overhead = round(traced / max(untraced, 1e-9), 3)
+
             st = ser.search_stats
             speedup = t_ser / max(t_par, 1e-9)
             rows.append({
@@ -148,6 +179,8 @@ def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
                 "parallel_ceiling": round(ceiling, 2),
                 "workers": procs,
             })
+            if trace_overhead is not None:
+                rows[-1]["trace_overhead"] = trace_overhead
 
         for topology, n, pods, chips in _fleet_configs(quick):
             topo = multi_pod_tpu(pods=pods, chips_per_pod=chips)
@@ -183,7 +216,14 @@ def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
                f"simulation + hierarchical islands; calibrated ceiling "
                f"{ceiling:.2f}x on {os.cpu_count()} cores)")
     if json_path:
-        write_json(rows, json_path)
+        write_json(rows, json_path, quick=quick)
+    if trace_path and trace_obs is not None:
+        from pathlib import Path
+        p = write_trace(trace_obs, trace_path)
+        m = write_metrics(trace_obs,
+                          Path(trace_path).with_name(
+                              Path(trace_path).stem + "_metrics.json"))
+        print(f"[bench] wrote trace -> {p}, metrics -> {m}")
     # soundness + determinism gates (acceptance criteria)
     flat_rows = [r for r in rows if r["topology"] != "multi-pod"]
     for r in flat_rows:
@@ -243,5 +283,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", default=None, help="write rows as JSON")
+    ap.add_argument("--trace", default=None,
+                    help="write the hetero/16 traced run's Perfetto trace "
+                         "(+ *_metrics.json snapshot) to this path")
     args = ap.parse_args()
-    run(quick=args.quick, json_path=args.json)
+    run(quick=args.quick, json_path=args.json, trace_path=args.trace)

@@ -58,12 +58,48 @@ def calibrate_process_ceiling(workers: int, n: int = 8_000_000) -> float:
     return seq / max(par, 1e-9)
 
 
-def write_json(rows: list[dict], path: str) -> None:
+def bench_meta(*, quick: bool | None = None) -> dict:
+    """Provenance header row prepended to every benchmark JSON artifact:
+    git sha, UTC timestamp, python/jax versions, and the quick-vs-full
+    flag.  ``kind == "meta"`` marks it; :mod:`benchmarks.compare` skips it
+    when gating, so two runs with different shas still compare on the
+    measurement rows alone."""
+    import datetime
+    import platform
+    import subprocess
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    try:
+        import jax
+        jax_version: str | None = jax.__version__
+    except Exception:
+        jax_version = None
+    return {
+        "kind": "meta",
+        "git_sha": sha,
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "python": platform.python_version(),
+        "jax": jax_version,
+        "quick": quick,
+    }
+
+
+def write_json(rows: list[dict], path: str, *,
+               quick: bool | None = None) -> None:
     """Persist benchmark rows as JSON (CI uploads these as artifacts so the
-    BENCH_* trajectory accumulates across commits)."""
+    BENCH_* trajectory accumulates across commits).  A :func:`bench_meta`
+    provenance header is prepended unless the rows already carry one."""
     import json
     from pathlib import Path
 
+    if not any(r.get("kind") == "meta" for r in rows):
+        rows = [bench_meta(quick=quick), *rows]
     p = Path(path)
     if p.parent != Path("."):
         p.parent.mkdir(parents=True, exist_ok=True)
@@ -75,13 +111,20 @@ def emit(rows: list[dict], title: str) -> str:
     """Print a small CSV block (one per paper table/figure).  Rows may be
     heterogeneous (a bench mixing row families, e.g. flat vs fleet rows):
     the header is the union of keys in encounter order, absent cells
-    render empty."""
+    render empty.  ``kind == "meta"`` provenance rows print as a comment
+    line instead of polluting the CSV header."""
+    meta = [r for r in rows if r.get("kind") == "meta"]
+    rows = [r for r in rows if r.get("kind") != "meta"]
     buf = io.StringIO()
     if rows:
         fields = list(dict.fromkeys(k for r in rows for k in r))
         w = csv.DictWriter(buf, fieldnames=fields, restval="")
         w.writeheader()
         w.writerows(rows)
-    out = f"# {title}\n{buf.getvalue()}"
+    header = f"# {title}\n"
+    for m in meta:
+        header += "# meta: " + " ".join(
+            f"{k}={v}" for k, v in m.items() if k != "kind") + "\n"
+    out = header + buf.getvalue()
     print(out)
     return out

@@ -151,7 +151,10 @@ class BenchSpec:
     def rows(self, raw: list[dict]) -> dict[tuple, dict]:
         out: dict[tuple, dict] = {}
         for r in raw:
-            if r.get("kind") in self.skip_kinds:
+            # "meta" is the provenance header (git sha, timestamp, versions
+            # — see benchmarks.common.bench_meta): never a measurement, so
+            # never gated, regardless of the per-spec skip list
+            if r.get("kind") == "meta" or r.get("kind") in self.skip_kinds:
                 continue
             out[tuple(r.get(k) for k in self.key)] = r
         return out
@@ -182,6 +185,10 @@ SPECS: dict[str, BenchSpec] = {
             Gate("n_islands", "equal"),
             Gate("islands_deduped", "equal"),
             Gate("hier_wall_s", "max", ceil=60.0),
+            # observability (ISSUE 7): tracing the serial search must stay
+            # within 10% of the untraced wall (min-of-2 timings both sides
+            # keep shared-runner noise out of the ratio)
+            Gate("trace_overhead", "max", ceil=1.10),
         ),
     ),
     "bench_replan": BenchSpec(

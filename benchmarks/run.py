@@ -1,6 +1,6 @@
 """Benchmark driver: one entry per paper table/figure + planner extras.
 
-PYTHONPATH=src python -m benchmarks.run [--quick]
+PYTHONPATH=src python -m benchmarks.run [--quick] [--trace PATH]
 """
 
 from __future__ import annotations
@@ -16,6 +16,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small cluster sizes only")
+    ap.add_argument("--trace", default=None,
+                    help="write the planner_search traced run's Perfetto "
+                         "trace (+ metrics snapshot) to this path")
     args = ap.parse_args()
 
     from benchmarks import (bench_planner_search, bench_replan,
@@ -31,7 +34,8 @@ def main() -> None:
          lambda: fig6b_hetero_disparate.run(quick=args.quick)),
         ("fig6c_dynamic_bw", lambda: fig6c_dynamic_bw.run(quick=args.quick)),
         ("planner_search",
-         lambda: bench_planner_search.run(quick=args.quick)),
+         lambda: bench_planner_search.run(quick=args.quick,
+                                          trace_path=args.trace)),
         ("bench_replan", lambda: bench_replan.run(quick=args.quick)),
         ("bench_scenarios", lambda: bench_scenarios.run(quick=args.quick)),
     ]

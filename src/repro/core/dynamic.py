@@ -19,6 +19,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
+from ..obs import Obs, resolve_obs
 from .cluster import ClusterTopology, NetworkEvent
 from .opgraph import ModelDesc
 from .planner import (PlanResult, bnb_layer_split, hetero_batch_shares,
@@ -161,6 +162,14 @@ class DynamicOrchestrator:
     #                                      a core.engine import cycle)
     replan_threshold: float = 1.10
     history: list[AdaptationRecord] = field(default_factory=list)
+    obs: Obs | None = None
+
+    def _record(self, rec: AdaptationRecord) -> None:
+        """Single funnel for adaptation telemetry: every action taken lands
+        in ``history`` AND bumps the ``replan.action.<action>`` counter, so
+        the registry and the hand-inspectable history cannot drift."""
+        self.history.append(rec)
+        resolve_obs(self.obs).inc(f"replan.action.{rec.action}")
 
     def adapt(self, plan: ParallelPlan, topo: ClusterTopology,
               event: NetworkEvent) -> ParallelPlan:
@@ -202,7 +211,7 @@ class DynamicOrchestrator:
                 # legacy threshold hysteresis: only applies when no
                 # remaining-horizon budget makes the cost model decisive
                 new_plan, action, new_step = plan, "keep", old.step_time
-            self.history.append(AdaptationRecord(
+            self._record(AdaptationRecord(
                 time=event.time, event=event, action=action,
                 old_step_time=old.step_time, new_step_time=new_step,
                 switch_cost=0.0 if action == "keep"
@@ -245,7 +254,7 @@ class DynamicOrchestrator:
         new = simulate_training_step(new_plan, self.model, topo,
                                      global_batch=self.global_batch,
                                      seq=self.seq, at_time=event.time)
-        self.history.append(AdaptationRecord(
+        self._record(AdaptationRecord(
             time=event.time, event=event, action=action,
             old_step_time=old.step_time, new_step_time=new.step_time))
         return new_plan

@@ -52,6 +52,7 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Sequence
 
+from ..obs import Obs, resolve_obs
 from .cluster import ClusterTopology, NetworkEvent
 from .opgraph import ModelDesc
 from .planner import SearchStats, StrategyPoint, _divisors, plan_hybrid
@@ -228,10 +229,11 @@ class StrategyCache:
     """
 
     def __init__(self, max_entries: int = 64, *, bw_quant: float = 0.25,
-                 perf_quant: float = 0.05):
+                 perf_quant: float = 0.05, obs: "Obs | None" = None):
         self.max_entries = max_entries
         self.bw_quant = bw_quant
         self.perf_quant = perf_quant
+        self.obs = resolve_obs(obs)
         self.stats = CacheStats()
         self._entries: OrderedDict[tuple, _CacheEntry] = OrderedDict()
         self._lock = threading.Lock()
@@ -242,6 +244,7 @@ class StrategyCache:
                 self.stats.hits += 1
             else:
                 self.stats.misses += 1
+        self.obs.inc("cache.hit" if hit else "cache.miss")
 
     def fingerprint(self, topo: ClusterTopology) -> TopologyFingerprint:
         return fingerprint_topology(topo, bw_quant=self.bw_quant,
@@ -262,6 +265,7 @@ class StrategyCache:
                 while len(self._entries) > self.max_entries:
                     self._entries.popitem(last=False)
                     self.stats.evictions += 1
+                    self.obs.inc("cache.eviction")
             else:
                 self._entries.move_to_end(key)
         return _CacheContext(self, entry)
@@ -336,11 +340,17 @@ class ReplanEngine:
                  reconfig: ReconfigCostModel | None = None,
                  switch_horizon_s: float | None = None,
                  straggler_escalate_gap: float = 1.15,
-                 executor=None, plan_top_k: int = 1):
+                 executor=None, plan_top_k: int = 1,
+                 obs: Obs | None = None):
         self.model = model
         self.global_batch = global_batch
         self.seq = seq
-        self.cache = cache if cache is not None else StrategyCache()
+        # telemetry bundle: every replan records a ``replan.<path>`` span,
+        # a ``replan.path.<path>`` counter and a ``replan.latency_s``
+        # observation into it (no-op unless tracing is on)
+        self.obs = resolve_obs(obs)
+        self.cache = cache if cache is not None \
+            else StrategyCache(obs=self.obs)
         # deprecated, kept for call-site compatibility: serial scoring needs
         # no thread pool; process parallelism comes from ``executor``
         self.n_workers = n_workers
@@ -472,11 +482,23 @@ class ReplanEngine:
                                       item[0][0].pp, item[0][0].ep,
                                       item[0][0].microbatches,
                                       item[0][0].grad_sync, item[0][1]))]
+        wall = time.perf_counter() - t0
         res = ReplanResult(plan=plan, predicted=sim, path=path,
-                           wall_time=time.perf_counter() - t0, stats=stats,
+                           wall_time=wall, stats=stats,
                            cold=cold, switch_cost=switch_cost, kept=kept,
                            top_plans=tuple(top_plans))
         self.history.append(res)
+        # single telemetry funnel: every planning call (cold or warm) exits
+        # through here, so the registry sees each path exactly once
+        self.obs.inc(f"replan.path.{path}")
+        self.obs.observe("replan.latency_s", wall)
+        if self.obs.enabled:
+            # the path is only known at the end, so the span is backdated
+            # to t0 (same perf_counter clock) to cover the whole call
+            handle = self.obs.span(f"replan.{path}", cold=cold, kept=kept,
+                                   step_time=sim.step_time)
+            handle.span.t0 = t0
+            handle.__exit__(None, None, None)
         return res
 
     def score_plan(self, plan: ParallelPlan,
@@ -503,7 +525,7 @@ class ReplanEngine:
         if missing:
             fresh = simulate_many([plans[i] for i in missing], self.model,
                                   topo, global_batch=self.global_batch,
-                                  seq=self.seq)
+                                  seq=self.seq, obs=self.obs)
             for i, sim in zip(missing, fresh):
                 if sim is not None:
                     ctx.put_score(plans[i], sim)
@@ -524,7 +546,7 @@ class ReplanEngine:
                           with_baseline=False,
                           max_candidates=self.max_candidates,
                           cache=self.cache, executor=self.executor,
-                          top_k=self.plan_top_k)
+                          top_k=self.plan_top_k, obs=self.obs)
         stats = res.search_stats or SearchStats()
         return self._finish(res.plan, res.predicted, "cold-plan", t0, stats,
                             cold=True, topo=topo, ctx=ctx,
@@ -722,7 +744,8 @@ class ReplanEngine:
                         with_baseline=False,
                         max_candidates=self.max_candidates, cache=self.cache,
                         points=neigh, allow_subset=False,
-                        incumbent_bound=best[0], executor=self.executor)
+                        incumbent_bound=best[0], executor=self.executor,
+                        obs=self.obs)
                     ns = res.search_stats or SearchStats()
                     stats.explored += ns.explored
                     stats.pruned += ns.pruned
@@ -792,7 +815,7 @@ class ReplanEngine:
                     with_baseline=False,
                     max_candidates=self.max_candidates, cache=self.cache,
                     points=neigh, allow_subset=False,
-                    executor=self.executor)
+                    executor=self.executor, obs=self.obs)
                 stats = res.search_stats or SearchStats()
                 return self._finish(res.plan, res.predicted, "neighborhood",
                                     t0, stats, cold=False, topo=topo,
@@ -818,7 +841,7 @@ class ReplanEngine:
                           with_baseline=False,
                           max_candidates=self.max_candidates,
                           cache=self.cache, incumbent_bound=bound,
-                          executor=self.executor)
+                          executor=self.executor, obs=self.obs)
         stats = res.search_stats or SearchStats()
         best_plan, best_sim = res.plan, res.predicted
         if inc_sim is not None and inc_sim.step_time < best_sim.step_time:
@@ -909,12 +932,15 @@ class HierarchicalReplanEngine:
                  flat_limit: int | None = None, fast_frac: float = 0.5,
                  gpus_per_node: int = 8,
                  max_candidates: int | None = None,
-                 max_sims: int | None = None):
+                 max_sims: int | None = None,
+                 obs: Obs | None = None):
         from .islands import DEFAULT_FLAT_LIMIT
         self.model = model
         self.global_batch = global_batch
         self.seq = seq
-        self.cache = cache if cache is not None else StrategyCache()
+        self.obs = resolve_obs(obs)
+        self.cache = cache if cache is not None \
+            else StrategyCache(obs=self.obs)
         self.executor = executor
         self.flat_limit = DEFAULT_FLAT_LIMIT if flat_limit is None \
             else flat_limit
@@ -938,7 +964,7 @@ class HierarchicalReplanEngine:
                 self.model, global_batch=self.global_batch, seq=self.seq,
                 cache=self.cache, executor=self.executor,
                 max_candidates=self.max_candidates,
-                gpus_per_node=self.gpus_per_node)
+                gpus_per_node=self.gpus_per_node, obs=self.obs)
         return self._flat
 
     def _wrap_flat(self, inner: ReplanResult) -> HierarchicalReplanResult:
@@ -967,7 +993,7 @@ class HierarchicalReplanEngine:
             flat_limit=self.flat_limit, fast_frac=self.fast_frac,
             gpus_per_node=self.gpus_per_node,
             max_candidates=self.max_candidates, max_sims=self.max_sims,
-            cache=self.cache, executor=self.executor)
+            cache=self.cache, executor=self.executor, obs=self.obs)
         assert hres.composed is not None
         self._plans = {ip.island.device_ids: ip
                        for ip in hres.composed.islands}
@@ -995,7 +1021,7 @@ class HierarchicalReplanEngine:
                 self.model, global_batch=ip.batch, seq=self.seq,
                 cache=self.cache, executor=self.executor,
                 max_candidates=self.max_candidates,
-                gpus_per_node=self.gpus_per_node)
+                gpus_per_node=self.gpus_per_node, obs=self.obs)
             eng.incumbent = (ip.plan, ip.predicted)
             eng._device_key = self.cache.fingerprint(
                 topo.subtopology(key)).device_key

@@ -44,6 +44,7 @@ import time
 from dataclasses import dataclass, replace
 from typing import Mapping, Sequence
 
+from ..obs import Obs, resolve_obs
 from .cluster import ClusterTopology
 from .opgraph import ModelDesc
 from .planner import PlanResult, SearchStats, plan_hybrid
@@ -314,7 +315,8 @@ def plan_hierarchical(topo: ClusterTopology, model: ModelDesc, *,
                       max_candidates: int | None = None,
                       max_sims: int | None = None,
                       cache=None, executor=None,
-                      top_k: int = 1) -> HierarchicalResult:
+                      top_k: int = 1,
+                      obs: Obs | None = None) -> HierarchicalResult:
     """Plan a (possibly fleet-scale) cluster via hierarchical island search.
 
     Small clusters (``len(alive) <= flat_limit``) and single-island
@@ -341,6 +343,9 @@ def plan_hierarchical(topo: ClusterTopology, model: ModelDesc, *,
             the cascade; see ``score_candidates``).  Essential at fleet
             scale — an island sub-search then stops after the budget's
             best-bound-first simulations.
+        obs: a :class:`repro.obs.Obs` bundle; records a
+            ``plan.hierarchical`` span with one ``island.search`` child per
+            distinct sub-search (no-op by default).
 
     Returns:
         A :class:`HierarchicalResult`; ``predicted_step`` is the composed
@@ -352,6 +357,7 @@ def plan_hierarchical(topo: ClusterTopology, model: ModelDesc, *,
             bandwidth), or the batch cannot cover the island count.
     """
     t0 = time.perf_counter()
+    obs = resolve_obs(obs)
     alive = topo.alive_ids()
     islands = partition_islands(topo, fast_frac=fast_frac)
     n_signatures = len({isl.signature for isl in islands})
@@ -360,7 +366,8 @@ def plan_hierarchical(topo: ClusterTopology, model: ModelDesc, *,
         res = plan_hybrid(topo, model, global_batch=global_batch, seq=seq,
                           gpus_per_node=gpus_per_node, with_baseline=False,
                           max_candidates=max_candidates, cache=cache,
-                          executor=executor, top_k=top_k, max_sims=max_sims)
+                          executor=executor, top_k=top_k, max_sims=max_sims,
+                          obs=obs)
         stats = res.search_stats or SearchStats()
         wall = time.perf_counter() - t0
         return HierarchicalResult(
@@ -380,6 +387,9 @@ def plan_hierarchical(topo: ClusterTopology, model: ModelDesc, *,
                 "no feasible plan found: cluster is partitioned (island "
                 f"{isl.index} is unreachable from island 0)")
 
+    hier_span = obs.span("plan.hierarchical", n_islands=len(islands),
+                         n_signatures=n_signatures, devices=len(alive))
+    hier_span.__enter__()
     stats = SearchStats()
     active = list(islands)
     dropped = 0
@@ -397,15 +407,21 @@ def plan_hierarchical(topo: ClusterTopology, model: ModelDesc, *,
         for key, members in groups.items():
             rep = members[0]
             sub = topo.subtopology(rep.device_ids)
-            try:
-                res = plan_hybrid(
-                    sub, model, global_batch=key[1], seq=seq,
-                    gpus_per_node=gpus_per_node, with_baseline=False,
-                    max_candidates=max_candidates, allow_subset=False,
-                    cache=cache, executor=executor, max_sims=max_sims)
-            except RuntimeError:
-                infeasible.update(m.index for m in members)
-                continue
+            with obs.span("island.search", signature=str(key[0]),
+                          share=key[1], members=len(members)) as isl_span:
+                try:
+                    res = plan_hybrid(
+                        sub, model, global_batch=key[1], seq=seq,
+                        gpus_per_node=gpus_per_node, with_baseline=False,
+                        max_candidates=max_candidates, allow_subset=False,
+                        cache=cache, executor=executor, max_sims=max_sims,
+                        obs=obs)
+                except RuntimeError:
+                    isl_span.set(feasible=False)
+                    infeasible.update(m.index for m in members)
+                    continue
+                isl_span.set(feasible=True,
+                             step_time=res.predicted.step_time)
             results[key] = res
             _merge_stats(stats, res.search_stats)
         if not infeasible:
@@ -438,6 +454,8 @@ def plan_hierarchical(topo: ClusterTopology, model: ModelDesc, *,
         topo, [isl.device_ids for isl in active], model)
     step = max(p.predicted.step_time for p in plans) + inter
     stats.wall_time = time.perf_counter() - t0
+    hier_span.set(step_time=step, islands_dropped=dropped)
+    hier_span.__exit__(None, None, None)
     return HierarchicalResult(
         path="hierarchical", wall_time=stats.wall_time, stats=stats,
         n_islands=len(islands), n_signatures=n_signatures,

@@ -35,6 +35,7 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Iterable, Mapping, Sequence
 
+from ..obs import Obs, resolve_obs
 from .cluster import ClusterTopology, DeviceInstance
 from .costmodel import graph_compute_lower_bound, op_time, transfer_time
 from .opgraph import ModelDesc, OpGraph, layer_flops
@@ -615,7 +616,8 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
                 points: Sequence[StrategyPoint] | None = None,
                 executor=None, top_k: int = 1,
                 prune: bool = True,
-                max_sims: int | None = None) -> PlanResult:
+                max_sims: int | None = None,
+                obs: Obs | None = None) -> PlanResult:
     """End-to-end planning: resolve the candidate set (cache / enumeration /
     Oobleck-style degrade), then hand it to the tiered search pipeline in
     :mod:`repro.core.search` — feasibility check, analytic bound, coarse
@@ -664,6 +666,10 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
             first; see ``score_candidates``).  NOT sound — the argmin
             identity is waived when it binds.  Used by the hierarchical
             island tier to bound fleet-scale sub-searches.
+        obs: a :class:`repro.obs.Obs` telemetry bundle; the search records
+            ``plan.hybrid``/``plan.enumerate``/``search.*`` spans and
+            counters into it.  Defaults to the ``REPRO_TRACE``-driven
+            process default (a shared no-op when the env var is unset).
 
     Returns:
         A :class:`PlanResult` holding the argmin plan, its simulated
@@ -681,6 +687,10 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
             "executor=SearchExecutor(...) for process-parallel scoring",
             DeprecationWarning, stacklevel=2)
     t0 = time.perf_counter()
+    obs = resolve_obs(obs)
+    plan_span = obs.span("plan.hybrid", devices=len(topo.alive_ids()),
+                         global_batch=global_batch)
+    plan_span.__enter__()
     if max_candidates is None:
         max_candidates = DEFAULT_MAX_CANDIDATES
     ctx = cache.context(topo, model, global_batch=global_batch, seq=seq,
@@ -688,36 +698,39 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
         if cache is not None else None
     enum_stats = SearchStats()
     if points is None:
-        cached_pts = ctx.get_points() if ctx is not None else None
-        if cached_pts is not None:
-            points = cached_pts
-            enum_stats.explored = len(points)
-        else:
-            points, enum_stats = enumerate_strategies(
-                topo, model, global_batch=global_batch,
-                gpus_per_node=gpus_per_node)
-            if not points and allow_subset:
-                ids = sorted(topo.alive_ids(),
-                             key=lambda i: -topo.device(i).spec.peak_flops
-                             * topo.device(i).perf_factor)
-                for n_use in range(len(ids) - 1, 0, -1):
-                    sub = topo.snapshot(0.0)
-                    for d in ids[n_use:]:
-                        sub.devices[d].alive = False
-                    points, enum_stats = enumerate_strategies(
-                        sub, model, global_batch=global_batch,
-                        gpus_per_node=gpus_per_node)
-                    if points:
-                        topo = sub
-                        # the degraded topology is a different fingerprint
-                        ctx = cache.context(topo, model,
-                                            global_batch=global_batch,
-                                            seq=seq,
-                                            gpus_per_node=gpus_per_node) \
-                            if cache is not None else None
-                        break
-            if ctx is not None:
-                ctx.put_points(points)
+        with obs.span("plan.enumerate") as enum_span:
+            cached_pts = ctx.get_points() if ctx is not None else None
+            if cached_pts is not None:
+                points = cached_pts
+                enum_stats.explored = len(points)
+            else:
+                points, enum_stats = enumerate_strategies(
+                    topo, model, global_batch=global_batch,
+                    gpus_per_node=gpus_per_node)
+                if not points and allow_subset:
+                    ids = sorted(topo.alive_ids(),
+                                 key=lambda i: -topo.device(i).spec.peak_flops
+                                 * topo.device(i).perf_factor)
+                    for n_use in range(len(ids) - 1, 0, -1):
+                        sub = topo.snapshot(0.0)
+                        for d in ids[n_use:]:
+                            sub.devices[d].alive = False
+                        points, enum_stats = enumerate_strategies(
+                            sub, model, global_batch=global_batch,
+                            gpus_per_node=gpus_per_node)
+                        if points:
+                            topo = sub
+                            # degraded topology is a different fingerprint
+                            ctx = cache.context(topo, model,
+                                                global_batch=global_batch,
+                                                seq=seq,
+                                                gpus_per_node=gpus_per_node) \
+                                if cache is not None else None
+                            break
+                if ctx is not None:
+                    ctx.put_points(points)
+            enum_span.set(explored=enum_stats.explored,
+                          cached=cached_pts is not None)
     else:
         points = list(points)
         enum_stats.explored = len(points)
@@ -729,8 +742,10 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
     scored = search_mod.score_candidates(
         topo, model, global_batch=global_batch, seq=seq, points=points,
         ctx=ctx, incumbent_bound=incumbent_bound, keep_top_k=max(1, top_k),
-        executor=executor, prune=prune, stats=stats, max_sims=max_sims)
+        executor=executor, prune=prune, stats=stats, max_sims=max_sims,
+        obs=obs)
     if not scored:
+        plan_span.__exit__(None, None, None)
         raise RuntimeError("no feasible plan found")
     best = scored[0]
     top_plans: list[tuple[ParallelPlan, StepSim]] = []
@@ -746,16 +761,20 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
 
     baseline = baseline_sim = tuned = tuned_sim = None
     if with_baseline:
-        baseline = megatron_default_plan(topo, model,
-                                         gpus_per_node=gpus_per_node)
-        baseline_sim = simulate_training_step(
-            baseline, model, topo, global_batch=global_batch, seq=seq)
-        tuned, tuned_sim = megatron_tuned_plan(
-            topo, model, global_batch=global_batch, seq=seq)
+        with obs.span("plan.baselines"):
+            baseline = megatron_default_plan(topo, model,
+                                             gpus_per_node=gpus_per_node)
+            baseline_sim = simulate_training_step(
+                baseline, model, topo, global_batch=global_batch, seq=seq)
+            tuned, tuned_sim = megatron_tuned_plan(
+                topo, model, global_batch=global_batch, seq=seq)
 
     if ctx is not None:
         stats.cache_hits, stats.cache_misses = ctx.counters()
     stats.wall_time = time.perf_counter() - t0
+    plan_span.set(simulated=stats.simulated, pruned=stats.pruned,
+                  step_time=best.sim.step_time)
+    plan_span.__exit__(None, None, None)
     return PlanResult(
         plan=best.plan, predicted=best.sim,
         candidates_evaluated=stats.simulated,

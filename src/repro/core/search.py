@@ -47,12 +47,30 @@ from dataclasses import dataclass
 from multiprocessing import get_context
 from typing import Sequence
 
+from ..obs import Obs, resolve_obs
 from .cluster import ClusterTopology
 from .opgraph import ModelDesc
 from .planner import (SearchStats, StrategyPoint, materialize_plan,
                       point_lower_bound)
 from .plans import ParallelPlan
 from .simulator import StepSim, simulate_many
+
+# Cascade-tier slugs: SearchStats field suffix == repro.obs counter suffix,
+# so _note_pruned is the single tally point for both (ISSUE 7 satellite —
+# the per-tier counters and the ``pruned`` total used to be bumped in five
+# separate places and could silently drift from ``cascade_candidates``).
+_TIERS = ("feasibility", "bound", "coarse")
+
+
+def _note_pruned(stats: SearchStats, obs: Obs, tier: str, n: int) -> None:
+    """Record ``n`` candidates cut by cascade tier ``tier`` — bumps the
+    per-tier :class:`SearchStats` field, the shared ``pruned`` total, and
+    the ``search.pruned.<tier>`` registry counter together."""
+    if n <= 0:
+        return
+    setattr(stats, f"pruned_{tier}", getattr(stats, f"pruned_{tier}") + n)
+    stats.pruned += n
+    obs.inc(f"search.pruned.{tier}", n)
 
 # ---------------------------------------------------------------------------
 # Tier 0: structural / memory feasibility
@@ -335,10 +353,14 @@ class CandidateOutcome:
 def _score_variant(point: StrategyPoint, refine: bool,
                    topo: ClusterTopology, model: ModelDesc, *,
                    global_batch: int, seq: int, ctx=None,
-                   memo: dict | None = None
+                   memo: dict | None = None, obs=None
                    ) -> tuple[ParallelPlan, StepSim] | None:
     """Cache-aware materialize + simulate; None on rejection (the candidate
-    raised ValueError/ZeroDivisionError somewhere in the pipeline)."""
+    raised ValueError/ZeroDivisionError somewhere in the pipeline).  ``obs``
+    reaches :func:`repro.core.simulator.simulate_many` so traced serial
+    searches record per-candidate ``sim.batch`` spans (worker chunks leave
+    it unset — shared-bound timing makes their sim counts nondeterministic,
+    and the chunk span already covers the time)."""
     plan = ctx.get_plan(point, refine) if ctx is not None else None
     if plan is None:
         try:
@@ -354,7 +376,8 @@ def _score_variant(point: StrategyPoint, refine: bool,
         sim = memo.get(key) if memo is not None else None
         if sim is None:
             sim = simulate_many([plan], model, topo,
-                                global_batch=global_batch, seq=seq)[0]
+                                global_batch=global_batch, seq=seq,
+                                obs=obs)[0]
             if sim is None:
                 return None
             if memo is not None:
@@ -377,6 +400,10 @@ _CTX_MEMO: dict = {}
 def _pool_init(shared_bound) -> None:
     global _SHARED_BOUND
     _SHARED_BOUND = shared_bound
+    # Workers must not inherit the parent's REPRO_TRACE default: each would
+    # atexit-dump its own (uncollected) trace over the parent's file.
+    # Worker telemetry is shipped explicitly (_score_chunk traced=True).
+    os.environ.pop("REPRO_TRACE", None)
 
 
 def _pool_warm(_: int) -> int:
@@ -410,16 +437,27 @@ def _sim_chunk(token: str, blob: bytes,
 
 def _score_chunk(token: str, blob: bytes,
                  tasks: list[tuple[float, int, StrategyPoint, bool]],
-                 threshold: float, tighten: bool
+                 threshold: float, tighten: bool, chunk_index: int = 0,
+                 traced: bool = False
                  ) -> tuple[list[tuple[int, StrategyPoint, bool,
-                                       ParallelPlan, StepSim]], int, int]:
+                                       ParallelPlan, StepSim]], int, int,
+                            "tuple[list[dict], dict] | None"]:
     """Score one chunk of (bound, index, point, refine) work items.
 
-    Returns (outcomes, n_rejected, n_pruned).  The pruning threshold is the
-    static ``threshold`` tightened by the cross-process shared bound (only
-    read when ``tighten`` — i.e. ``keep_top_k == 1``, where a single shared
-    scalar is the correct k-th best)."""
+    Returns (outcomes, n_rejected, n_pruned, obs_delta).  The pruning
+    threshold is the static ``threshold`` tightened by the cross-process
+    shared bound (only read when ``tighten`` — i.e. ``keep_top_k == 1``,
+    where a single shared scalar is the correct k-th best).
+
+    With ``traced`` the chunk records into a worker-local
+    :class:`repro.obs.Obs` and ships the delta (span dicts + metrics
+    snapshot) back for the parent to re-parent under its tier-3 span —
+    tracing never touches scoring, so serial == parallel plan identity is
+    unaffected."""
     topo, model, global_batch, seq = _load_search_ctx(token, blob)
+    wobs = Obs(enabled=True) if traced else None
+    handle = wobs.span("search.worker.chunk", chunk=chunk_index,
+                       n_tasks=len(tasks)) if wobs is not None else None
     out: list[tuple[int, StrategyPoint, bool, ParallelPlan, StepSim]] = []
     rejected = pruned = 0
     for bound, index, point, refine in tasks:
@@ -442,7 +480,13 @@ def _score_chunk(token: str, blob: bytes,
             with _SHARED_BOUND.get_lock():
                 if sim.step_time < _SHARED_BOUND.value:
                     _SHARED_BOUND.value = sim.step_time
-    return out, rejected, pruned
+    delta = None
+    if wobs is not None:
+        handle.set(simulated=len(out), rejected=rejected, pruned=pruned)
+        handle.__exit__(None, None, None)
+        wobs.inc("search.worker.chunks")
+        delta = wobs.export_delta()
+    return out, rejected, pruned, delta
 
 
 # ---------------------------------------------------------------------------
@@ -506,11 +550,14 @@ class SearchExecutor:
     def run(self, topo: ClusterTopology, model: ModelDesc, *,
             global_batch: int, seq: int,
             tasks: Sequence[tuple[float, int, StrategyPoint, bool]],
-            threshold: float, tighten: bool
+            threshold: float, tighten: bool, obs: Obs | None = None
             ) -> tuple[list[tuple[int, StrategyPoint, bool,
                                   ParallelPlan, StepSim]], int, int]:
         """Score ``tasks`` across the pool; returns (outcomes, rejected,
-        pruned) merged over all chunks."""
+        pruned) merged over all chunks.  With an enabled ``obs``, worker
+        chunk spans are shipped back and re-parented under the caller's
+        current span (one Perfetto lane per worker process)."""
+        obs = resolve_obs(obs)
         pool = self._ensure()
         blob = pickle.dumps((topo, model, global_batch, seq),
                             protocol=pickle.HIGHEST_PROTOCOL)
@@ -526,16 +573,19 @@ class SearchExecutor:
         # the most promising candidates across workers — every worker lands
         # a good incumbent early and the shared bound tightens fast
         chunks = [list(tasks[i::n_chunks]) for i in range(n_chunks)]
+        parent_id = obs.current_span_id()
         futures = [pool.submit(_score_chunk, token, blob, chunk,
-                               threshold, tighten)
-                   for chunk in chunks if chunk]
+                               threshold, tighten, ci, obs.enabled)
+                   for ci, chunk in enumerate(chunks) if chunk]
         outcomes: list = []
         rejected = pruned = 0
         for fut in as_completed(futures):
-            out, rej, pr = fut.result()
+            out, rej, pr, delta = fut.result()
             outcomes.extend(out)
             rejected += rej
             pruned += pr
+            if delta is not None:
+                obs.adopt(delta[0], parent_id, delta[1])
         return outcomes, rejected, pruned
 
     def simulate_plans(self, topo: ClusterTopology, model: ModelDesc,
@@ -581,7 +631,8 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
                      executor: SearchExecutor | None = None,
                      prune: bool = True,
                      stats: SearchStats | None = None,
-                     max_sims: int | None = None
+                     max_sims: int | None = None,
+                     obs: Obs | None = None
                      ) -> list[CandidateOutcome]:
     """Run the staged pruning cascade over ``points`` and return every fully
     simulated candidate, sorted by ``(step_time, canonical index)`` — the
@@ -599,37 +650,47 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
     uses it to keep fleet-scale sub-searches bounded."""
     if stats is None:
         stats = SearchStats()
+    obs = resolve_obs(obs)
+    # drift invariant (ISSUE 7 satellite): everything this call adds to
+    # ``stats.pruned`` must land in exactly one per-tier counter — checked
+    # on exit against the deltas, so a new tally site that bypasses
+    # ``_note_pruned`` fails loudly instead of skewing cascade_candidates
+    pruned_at_entry = stats.pruned
+    tiers_at_entry = (stats.pruned_feasibility + stats.pruned_bound
+                      + stats.pruned_coarse)
     variants = (True, False) if topo.is_heterogeneous() else (False,)
     nv = len(variants)
+    cascade = obs.span("search.cascade", n_points=len(points),
+                       n_devices=len(topo.alive_ids()), prune=prune)
+    cascade.__enter__()
 
     # canonical expansion: indices cover the FULL candidate list (pruned
     # included) so tie-breaking matches exhaustive scoring exactly
     bctx = _bound_context(topo, model, seq=seq) if prune else None
     tasks: list[tuple[float, int, StrategyPoint, bool]] = []
-    for pi, point in enumerate(points):
-        base = pi * nv
-        if prune:
-            if not point_feasible(point, topo, model,
-                                  global_batch=global_batch):
-                stats.pruned_feasibility += nv
-                stats.pruned += nv
-                continue
-            lb1 = point_lower_bound(point, topo, model,
-                                    global_batch=global_batch, seq=seq)
-            if incumbent_bound is not None and lb1 >= incumbent_bound:
-                stats.pruned_bound += nv
-                stats.pruned += nv
-                continue
-            lb2 = max(lb1, _coarse_bound(point, bctx,  # type: ignore[arg-type]
-                                         global_batch=global_batch))
-            if incumbent_bound is not None and lb2 >= incumbent_bound:
-                stats.pruned_coarse += nv
-                stats.pruned += nv
-                continue
-        else:
-            lb1 = lb2 = 0.0
-        for vi, refine in enumerate(variants):
-            tasks.append((lb2, base + vi, point, refine))
+    with obs.span("search.tiers012"):
+        for pi, point in enumerate(points):
+            base = pi * nv
+            if prune:
+                if not point_feasible(point, topo, model,
+                                      global_batch=global_batch):
+                    _note_pruned(stats, obs, "feasibility", nv)
+                    continue
+                lb1 = point_lower_bound(point, topo, model,
+                                        global_batch=global_batch, seq=seq)
+                if incumbent_bound is not None and lb1 >= incumbent_bound:
+                    _note_pruned(stats, obs, "bound", nv)
+                    continue
+                lb2 = max(lb1,
+                          _coarse_bound(point, bctx,  # type: ignore[arg-type]
+                                        global_batch=global_batch))
+                if incumbent_bound is not None and lb2 >= incumbent_bound:
+                    _note_pruned(stats, obs, "coarse", nv)
+                    continue
+            else:
+                lb1 = lb2 = 0.0
+            for vi, refine in enumerate(variants):
+                tasks.append((lb2, base + vi, point, refine))
     # best-first simulation order tightens the incumbent fastest; the index
     # tie-break keeps equal-bound ordering canonical
     tasks.sort(key=lambda t: (t[0], t[1]))
@@ -649,6 +710,9 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
         sim_times.append(sim.step_time)
         stats.simulated += 1
 
+    tier3 = obs.span("search.tier3", n_tasks=len(tasks),
+                     parallel=executor is not None and len(tasks) > 1)
+    tier3.__enter__()
     if executor is not None and len(tasks) > 1:
         # resolve session-cache hits in the parent first: they are free and
         # pre-tighten the bound the workers start from
@@ -663,23 +727,22 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
                 pending.append((bound, index, point, refine))
         thr = threshold()
         live = [t for t in pending if not (prune and t[0] > thr)]
-        cut = len(pending) - len(live)
-        stats.pruned_coarse += cut
-        stats.pruned += cut
+        _note_pruned(stats, obs, "coarse", len(pending) - len(live))
         if max_sims is not None:
             budget = max(0, max_sims - len(sim_times))
             if len(live) > budget:
                 # tasks are bound-sorted: the kept prefix is the most
                 # promising; the tail is skipped, not (soundly) pruned
                 stats.budget_skipped += len(live) - budget
+                obs.inc("search.budget_skipped", len(live) - budget)
                 live = live[:budget]
         if live:
             out, rejected, pruned = executor.run(
                 topo, model, global_batch=global_batch, seq=seq,
-                tasks=live, threshold=thr, tighten=(keep_top_k == 1))
+                tasks=live, threshold=thr, tighten=(keep_top_k == 1),
+                obs=obs)
             stats.rejected += rejected
-            stats.pruned_coarse += pruned
-            stats.pruned += pruned
+            _note_pruned(stats, obs, "coarse", pruned)
             for index, point, refine, plan, sim in out:
                 # merge the worker's cache delta into the session cache
                 if ctx is not None:
@@ -691,6 +754,7 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
         for bound, index, point, refine in tasks:
             if max_sims is not None and len(sim_times) >= max_sims:
                 stats.budget_skipped += 1
+                obs.inc("search.budget_skipped")
                 continue
             thr = threshold()
             if prune and bound > thr:
@@ -698,18 +762,31 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
                 if point_lower_bound(point, topo, model,
                                      global_batch=global_batch,
                                      seq=seq) > thr:
-                    stats.pruned_bound += 1
+                    _note_pruned(stats, obs, "bound", 1)
                 else:
-                    stats.pruned_coarse += 1
-                stats.pruned += 1
+                    _note_pruned(stats, obs, "coarse", 1)
                 continue
             res = _score_variant(point, refine, topo, model,
                                  global_batch=global_batch, seq=seq,
-                                 ctx=ctx, memo=memo if ctx is None else None)
+                                 ctx=ctx, memo=memo if ctx is None else None,
+                                 obs=obs)
             if res is None:
                 stats.rejected += 1
                 continue
             note(index, point, refine, res[0], res[1])
+    tier3.set(simulated=stats.simulated)
+    tier3.__exit__(None, None, None)
 
+    obs.inc("search.simulated", stats.simulated)
+    obs.inc("search.rejected", stats.rejected)
+    tier_delta = (stats.pruned_feasibility + stats.pruned_bound
+                  + stats.pruned_coarse) - tiers_at_entry
+    if stats.pruned - pruned_at_entry != tier_delta:
+        raise RuntimeError(
+            f"cascade prune-counter drift: pruned "
+            f"delta {stats.pruned - pruned_at_entry} != per-tier delta "
+            f"{tier_delta} — some tally site bypassed _note_pruned")
+    cascade.set(simulated=stats.simulated, pruned=stats.pruned)
+    cascade.__exit__(None, None, None)
     outcomes.sort(key=lambda o: (o.sim.step_time, o.index))
     return outcomes

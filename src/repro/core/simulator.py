@@ -391,7 +391,8 @@ def simulate_training_step(plan: ParallelPlan, model: ModelDesc,
 
 def simulate_many(plans: Sequence[ParallelPlan], model: ModelDesc,
                   topo: ClusterTopology, *, global_batch: int, seq: int,
-                  at_time: float = 0.0) -> list["StepSim | None"]:
+                  at_time: float = 0.0,
+                  obs=None) -> list["StepSim | None"]:
     """Batch step simulation: score many plans against one topology state.
 
     The topology snapshot is materialized once for the whole batch (one
@@ -403,18 +404,26 @@ def simulate_many(plans: Sequence[ParallelPlan], model: ModelDesc,
     non-finite step time is infeasibility too: with routed transfer pricing
     an unroutable collective or p2p hop (partitioned cluster) simulates to
     ``inf``, and planning must reject such plans, not rank them.
+
+    ``obs`` is a :class:`repro.obs.Obs` bundle; the batch records one
+    ``sim.batch`` span and a ``sim.plans`` counter (no-op by default).
     """
+    from ..obs import resolve_obs
+    obs = resolve_obs(obs)
     snap = topo.snapshot(at_time)
     out: list[StepSim | None] = []
-    for plan in plans:
-        try:
-            sim = simulate_training_step(
-                plan, model, snap, global_batch=global_batch, seq=seq)
-        except (ValueError, ZeroDivisionError):
-            sim = None
-        if sim is not None and not math.isfinite(sim.step_time):
-            sim = None
-        out.append(sim)
+    with obs.span("sim.batch", n_plans=len(plans)) as sp:
+        for plan in plans:
+            try:
+                sim = simulate_training_step(
+                    plan, model, snap, global_batch=global_batch, seq=seq)
+            except (ValueError, ZeroDivisionError):
+                sim = None
+            if sim is not None and not math.isfinite(sim.step_time):
+                sim = None
+            out.append(sim)
+        sp.set(feasible=sum(1 for s in out if s is not None))
+    obs.inc("sim.plans", len(plans))
     return out
 
 

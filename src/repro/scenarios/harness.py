@@ -46,6 +46,7 @@ from repro.core import (ClusterTopology, DynamicOrchestrator, ModelDesc,
                         NetworkEvent, ParallelPlan, ReconfigCostModel,
                         ReplanEngine, StrategyCache, plan_sequence_dp,
                         simulate_training_step)
+from repro.obs import NULL_OBS, Obs, resolve_obs
 
 from . import catalog
 from .trace import Trace
@@ -83,6 +84,14 @@ class HarnessConfig:
     # the replay itself runs under run_many(parallel=True) — nesting pools
     # oversubscribes the host.
     search_procs: int | None = None
+    # telemetry bundle (repro.obs.Obs): the replay records scenario.*
+    # spans plus the engine/orchestrator replan counters and latency
+    # histograms into it.  None falls back to the REPRO_TRACE-driven
+    # process default (a no-op unless the env var is set).  Note that
+    # run_many(parallel=True) replays in spawn workers — each worker
+    # records into its own pickled copy, which is not shipped back; pass
+    # an explicit obs only for in-process replays.
+    obs: Obs | None = None
 
 
 @dataclass(frozen=True)
@@ -230,12 +239,15 @@ def _oracle_policies(cfg: HarnessConfig, topo: ClusterTopology,
     space) is taken instead — so the DP oracle is never worse than the
     greedy one.
     """
+    # oracle searches are baseline machinery, not the policy under test:
+    # they get NULL_OBS so the replay's replan.*/cache.* metrics reflect
+    # only the adapted engine
     engine = ReplanEngine(cfg.model, global_batch=cfg.global_batch,
-                          seq=cfg.seq, cache=StrategyCache(),
+                          seq=cfg.seq, cache=StrategyCache(obs=NULL_OBS),
                           max_candidates=cfg.max_candidates,
                           n_workers=cfg.n_workers, reconfig=reconfig,
                           executor=executor,
-                          plan_top_k=max(1, cfg.dp_top_k))
+                          plan_top_k=max(1, cfg.dp_top_k), obs=NULL_OBS)
     snaps = [topo.snapshot(t) for t in boundaries]
     winners: list[ParallelPlan | None] = []
     runners_up: list[ParallelPlan] = []
@@ -348,24 +360,44 @@ def run_scenario(cfg: HarnessConfig, scenario: str | Trace, seed: int = 0,
             executor.close()
 
 
+_ACTION_PREFIX = "replan.action."
+
+
+def _action_delta(obs: Obs, before: dict) -> dict[str, int]:
+    """Per-action counts this replay added to the registry: the delta of
+    the ``replan.action.*`` counters against the entry snapshot (a shared
+    registry may carry counts from earlier replays)."""
+    after = obs.metrics.counters_with_prefix(_ACTION_PREFIX)
+    return {k[len(_ACTION_PREFIX):]: after[k] - before.get(k, 0)
+            for k in after if after[k] - before.get(k, 0) > 0}
+
+
 def _run_scenario_inner(cfg: HarnessConfig, trace: Trace,
                         topo: ClusterTopology, seed: int,
                         boundaries: list[float], horizon: float,
                         reconfig: ReconfigCostModel, executor,
                         wall0: float) -> ScenarioReport:
+    obs = resolve_obs(cfg.obs)
+    actions0 = obs.metrics.counters_with_prefix(_ACTION_PREFIX) \
+        if obs.enabled else {}
+    replay_span = obs.span("scenario.replay", scenario=trace.name, seed=seed,
+                           n_events=len(trace))
+    replay_span.__enter__()
     engine = ReplanEngine(cfg.model, global_batch=cfg.global_batch,
-                          seq=cfg.seq, cache=StrategyCache(),
+                          seq=cfg.seq, cache=StrategyCache(obs=obs),
                           max_candidates=cfg.max_candidates,
                           n_workers=cfg.n_workers, reconfig=reconfig,
-                          switch_horizon_s=horizon, executor=executor)
+                          switch_horizon_s=horizon, executor=executor,
+                          obs=obs)
     orch = DynamicOrchestrator(model=cfg.model, global_batch=cfg.global_batch,
-                               seq=cfg.seq, engine=engine)
+                               seq=cfg.seq, engine=engine, obs=obs)
     cold = engine.plan(topo.snapshot(0.0))
     plan0 = cold.plan
 
     # -- static: the t=0 plan, never revisited ------------------------------
-    static_segs = [(t, _step_time(plan0, cfg, topo, t), 0.0)
-                   for t in boundaries]
+    with obs.span("scenario.static"):
+        static_segs = [(t, _step_time(plan0, cfg, topo, t), 0.0)
+                       for t in boundaries]
 
     # -- adapted: every event through the orchestrator ----------------------
     plan = plan0
@@ -379,6 +411,8 @@ def _run_scenario_inner(cfg: HarnessConfig, trace: Trace,
                itertools.groupby(trace.events, key=lambda e: e.time)
                if 0.0 < t <= horizon]
     for t, evs in grouped:
+        interval = obs.span("scenario.interval", t=t, n_events=len(evs))
+        interval.__enter__()
         overhead = 0.0
         # the hysteresis amortizes switch cost over what is actually left
         engine.switch_horizon_s = max(horizon - t, 0.0)
@@ -404,17 +438,28 @@ def _run_scenario_inner(cfg: HarnessConfig, trace: Trace,
                 overhead += lat
             plan = new_plan
         adapted_segs.append((t, _step_time(plan, cfg, topo, t), overhead))
+        interval.set(switched=plan is not plan0)
+        interval.__exit__(None, None, None)
 
     # -- oracles: clairvoyant greedy + cross-interval DP bound --------------
     oracle_res = oracle_dp_res = None
     if cfg.oracle:
-        oracle_res, oracle_dp_res = _oracle_policies(
-            cfg, topo, boundaries, horizon, reconfig, adapted_plans,
-            executor=executor)
+        with obs.span("scenario.oracle"):
+            oracle_res, oracle_dp_res = _oracle_policies(
+                cfg, topo, boundaries, horizon, reconfig, adapted_plans,
+                executor=executor)
 
-    actions: dict[str, int] = {}
-    for rec in orch.history:
-        actions[rec.action] = actions.get(rec.action, 0) + 1
+    # replan-path histogram: the metrics registry is the source of truth
+    # (every action funnels through DynamicOrchestrator._record); the
+    # history fallback serves untraced replays only
+    if obs.enabled:
+        actions = _action_delta(obs, actions0)
+    else:
+        actions = {}
+        for rec in orch.history:
+            actions[rec.action] = actions.get(rec.action, 0) + 1
+    replay_span.set(replans=replans, adaptations=len(orch.history))
+    replay_span.__exit__(None, None, None)
     return ScenarioReport(
         scenario=trace.name, seed=trace.seed if trace.seed is not None
         else seed,
@@ -560,11 +605,11 @@ class ScenarioHarness:
                  max_candidates: int | None = None,
                  n_workers: int | None = None,
                  reconfig: ReconfigCostModel | None = None,
-                 oracle: bool = True):
+                 oracle: bool = True, obs: Obs | None = None):
         self.cfg = HarnessConfig(
             model=model, global_batch=global_batch, seq=seq,
             max_candidates=max_candidates, n_workers=n_workers,
-            reconfig=reconfig, oracle=oracle)
+            reconfig=reconfig, oracle=oracle, obs=obs)
 
     def run(self, scenario: str | Trace, seed: int = 0,
             topo: ClusterTopology | None = None) -> ScenarioReport:

@@ -36,7 +36,7 @@ _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 MD_ROOTS = ("README.md", "ROADMAP.md", "CHANGES.md", "PAPER.md",
             "PAPERS.md", "ISSUE.md", "SNIPPETS.md")
 DOC_DIRS = ("docs",)
-PY_ROOTS = ("src/repro/core", "benchmarks", "tools")
+PY_ROOTS = ("src/repro/core", "src/repro/obs", "benchmarks", "tools")
 
 
 def check_links() -> list[str]:

@@ -1,0 +1,155 @@
+"""Trace/metrics summarizer CLI (ISSUE 7): self-time, percentiles, hit rates.
+
+Loads a combined Perfetto trace + metrics file written by
+:func:`repro.obs.write_trace` (or a bare metrics snapshot from
+:func:`repro.obs.write_metrics`) and prints:
+
+* a **self-time-per-phase table** — for every span name: call count, total
+  time, and self time (total minus the time spent in child spans, computed
+  from the ``span_id``/``parent_id`` links the exporter embeds in each
+  event's ``args``), sorted by self time;
+* **replan-latency percentiles** — p50/p95/p99 of the ``replan.latency_s``
+  histogram (plus every other recorded histogram);
+* **cache hit rates** — from the ``cache.hit``/``cache.miss`` counter pair,
+  and the full counter listing.
+
+Stdlib-only (the CI artifact can be inspected on any machine)::
+
+    python tools/trace_report.py trace.json
+    PYTHONPATH=src python -m tools.trace_report trace.json
+
+Produce a trace to feed it, e.g. a traced ``cloud_spot`` harness replay::
+
+    PYTHONPATH=src python - <<'EOF'
+    from repro.obs import Obs, write_trace
+    from repro.scenarios.harness import HarnessConfig, run_scenario
+    from benchmarks.common import PAPER_MODELS
+    obs = Obs()
+    cfg = HarnessConfig(model=PAPER_MODELS["LLaMA_7B"], global_batch=64,
+                        seq=2048, max_candidates=96, obs=obs)
+    run_scenario(cfg, "cloud_spot", seed=7)
+    write_trace(obs, "trace.json")
+    EOF
+    python tools/trace_report.py trace.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+METRICS_KEY = "reproMetrics"          # mirror of repro.obs.export.METRICS_KEY
+
+
+def phase_table(events: list[dict]) -> list[dict]:
+    """Aggregate complete-span events into per-name rows: count, total
+    duration, and self time (duration minus direct children's durations,
+    via the ``args.span_id``/``args.parent_id`` links), seconds."""
+    dur_by_id: dict = {}
+    parent: dict = {}
+    name_by_id: dict = {}
+    rows: dict[str, dict] = {}
+    for ev in events:
+        if ev.get("ph") != "X":
+            continue
+        args = ev.get("args", {})
+        sid = args.get("span_id")
+        dur = ev.get("dur", 0.0) / 1e6
+        if sid is not None:
+            dur_by_id[sid] = dur
+            parent[sid] = args.get("parent_id")
+            name_by_id[sid] = ev.get("name", "?")
+        row = rows.setdefault(ev.get("name", "?"),
+                              {"phase": ev.get("name", "?"), "count": 0,
+                               "total_s": 0.0, "self_s": 0.0})
+        row["count"] += 1
+        row["total_s"] += dur
+        row["self_s"] += dur
+    for sid, dur in dur_by_id.items():
+        pid = parent.get(sid)
+        if pid in dur_by_id:
+            rows[name_by_id[pid]]["self_s"] -= dur
+    out = sorted(rows.values(), key=lambda r: -r["self_s"])
+    for r in out:
+        r["self_s"] = max(0.0, r["self_s"])    # clock skew across processes
+    return out
+
+
+def _fmt_s(x: float) -> str:
+    if not isinstance(x, (int, float)) or not math.isfinite(x):
+        return "-"
+    return f"{x * 1e3:10.2f}ms" if x < 1.0 else f"{x:10.3f}s "
+
+
+def render(doc: dict) -> str:
+    """The full report for one loaded trace/metrics document."""
+    lines: list[str] = []
+    events = doc.get("traceEvents", [])
+    metrics = doc.get(METRICS_KEY, doc if "traceEvents" not in doc else {})
+
+    if events:
+        lines.append("== self time per phase ==")
+        lines.append(f"{'phase':<28} {'count':>7} {'total':>12} "
+                     f"{'self':>12}")
+        for r in phase_table(events):
+            lines.append(f"{r['phase']:<28} {r['count']:>7} "
+                         f"{_fmt_s(r['total_s']):>12} "
+                         f"{_fmt_s(r['self_s']):>12}")
+        workers = {ev.get('pid') for ev in events} - \
+            {ev.get('pid') for ev in events
+             if ev.get('args', {}).get('parent_id') is None}
+        lines.append(f"{len(events)} spans across "
+                     f"{len({ev.get('pid') for ev in events})} process "
+                     f"lane(s) ({len(workers)} worker)")
+
+    hists = {k: v for k, v in metrics.items()
+             if isinstance(v, dict) and v.get("type") == "histogram"}
+    counters = {k: v for k, v in metrics.items()
+                if not isinstance(v, dict)}
+    if hists:
+        lines.append("")
+        lines.append("== latency histograms (p50 / p95 / p99) ==")
+        for name in sorted(hists):
+            h = hists[name]
+            lines.append(
+                f"{name:<28} n={h.get('count', 0):>6}  "
+                f"p50={_fmt_s(h.get('p50'))} p95={_fmt_s(h.get('p95'))} "
+                f"p99={_fmt_s(h.get('p99'))} max={_fmt_s(h.get('max'))}")
+
+    if counters:
+        lines.append("")
+        lines.append("== counters ==")
+        hit, miss = counters.get("cache.hit", 0), counters.get("cache.miss", 0)
+        if hit or miss:
+            rate = hit / (hit + miss) if (hit + miss) else 0.0
+            lines.append(f"{'cache hit rate':<28} {rate:7.1%}  "
+                         f"({hit} hits / {miss} misses)")
+        for name in sorted(counters):
+            lines.append(f"{name:<28} {counters[name]:>10}")
+    if not lines:
+        lines.append("(empty trace: no spans, no metrics)")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    """CLI entry point: load the file, print the report."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="combined trace JSON (write_trace) or "
+                                  "bare metrics snapshot (write_metrics)")
+    args = ap.parse_args(argv)
+    path = Path(args.trace)
+    if not path.exists():
+        print(f"[trace_report] no such file: {path}", file=sys.stderr)
+        return 1
+    try:
+        print(render(json.loads(path.read_text())))
+    except BrokenPipeError:                    # e.g. piped through head
+        sys.stderr.close()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
