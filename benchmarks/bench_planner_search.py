@@ -31,6 +31,16 @@ dedup + the ``max_sims`` anytime budget) and gate on the partition shape,
 the dedup count, and an absolute end-to-end wall budget (< 30 s at 4096
 devices, the ISSUE 6 acceptance bar).
 
+**Sim-fidelity rows** (ISSUE 8) pin the fabric layer's observable
+behaviour: the sparse 2-pod torus training-step estimate under the default
+cut-through pipelining vs the store-and-forward reference
+(``use_fabric(FabricModel(pipelining=False))``) — pipelined must be
+strictly faster on a fabric with relayed pairs — and the deterministic
+mid-flight re-routing counters from replaying the ``diurnal_wan_crossover``
+catalog trace through ``simulate_epoch``.  ``benchmarks.compare`` gates
+the pipelined<=S&F boolean, the pipelined/S&F delta and the exact reroute
+counts against the committed baseline.
+
 The hetero/16 row additionally measures **tracing overhead** (ISSUE 7):
 the serial cascade runs again untraced and twice traced into a live
 :class:`repro.obs.Obs` bundle; ``trace_overhead`` is the min-of-2 traced
@@ -59,8 +69,10 @@ from __future__ import annotations
 import os
 import time
 
-from repro.core import (SearchExecutor, enumerate_strategies, hetero_cluster,
-                        multi_pod_tpu, plan_hierarchical, plan_hybrid)
+from repro.core import (FabricModel, SearchExecutor, enumerate_strategies,
+                        hetero_cluster, megatron_default_plan, multi_pod_tpu,
+                        plan_hierarchical, plan_hybrid, simulate_epoch,
+                        simulate_training_step, use_fabric)
 from repro.obs import Obs, write_metrics, write_trace
 from benchmarks.common import (PAPER_MODELS, calibrate_process_ceiling, emit,
                                write_json)
@@ -95,6 +107,43 @@ def _fleet_configs(quick: bool):
     free (16 isomorphic pods collapse to one sub-search)."""
     return [("multi-pod", 1024, 4, 256),
             ("multi-pod", 4096, 16, 256)]
+
+
+def _sim_fidelity_rows(desc) -> list[dict]:
+    """ISSUE 8 fabric rows: pipelined-vs-store-and-forward step estimate
+    on the sparse 2-pod torus, and the deterministic mid-flight re-routing
+    counters from the ``diurnal_wan_crossover`` catalog trace."""
+    from repro.scenarios.catalog import build
+
+    topo = multi_pod_tpu(pods=2, chips_per_pod=16)
+    plan = megatron_default_plan(topo, desc, microbatches=4)
+    kw = dict(global_batch=128, seq=2048)
+    step_pip = simulate_training_step(plan, desc, topo, **kw).step_time
+    with use_fabric(FabricModel(pipelining=False)):
+        step_snf = simulate_training_step(plan, desc, topo, **kw).step_time
+
+    ctopo, _ = build("diurnal_wan_crossover", seed=0)
+    cplan = megatron_default_plan(ctopo.copy(), desc, microbatches=4)
+    ckw = dict(global_batch=512, seq=2048, steps=8)
+    obs = Obs()
+    on = simulate_epoch(cplan, desc, ctopo, obs=obs, **ckw)
+    off = simulate_epoch(cplan, desc, ctopo, reroute_in_flight=False, **ckw)
+    return [{
+        "topology": "sim-fidelity",
+        "gpus": 32,
+        "kind": "sim_fidelity",
+        "step_pipelined": round(step_pip, 5),
+        "step_snf": round(step_snf, 5),
+        # acceptance: cut-through multi-hop estimates are strictly below
+        # store-and-forward on a fabric with relayed pairs
+        "pipelined_le_snf": step_pip < step_snf,
+        "pipeline_delta": round(step_snf / max(step_pip, 1e-12), 4),
+        "reroute_events": obs.metrics.counter_value("sim.reroute.events"),
+        "reroute_steps": obs.metrics.counter_value("sim.reroute.steps"),
+        "reroute_moves_epoch": on.total_time != off.total_time,
+        "epoch_reroute_s": round(on.total_time, 4),
+        "epoch_boundary_s": round(off.total_time, 4),
+    }]
 
 
 def run(quick: bool = False, json_path: str | None = None,
@@ -207,6 +256,8 @@ def run(quick: bool = False, json_path: str | None = None,
                     round(comp.inter_sync_s, 4) if comp else 0.0,
                 "hier_wall_s": round(t_hier, 2),
             })
+
+        rows.extend(_sim_fidelity_rows(desc))
     finally:
         executor.close()
     # persist the telemetry BEFORE any gate can fire: a failed assertion
@@ -225,7 +276,8 @@ def run(quick: bool = False, json_path: str | None = None,
                               Path(trace_path).stem + "_metrics.json"))
         print(f"[bench] wrote trace -> {p}, metrics -> {m}")
     # soundness + determinism gates (acceptance criteria)
-    flat_rows = [r for r in rows if r["topology"] != "multi-pod"]
+    flat_rows = [r for r in rows if r["topology"] != "multi-pod"
+                 and r.get("kind") != "sim_fidelity"]
     for r in flat_rows:
         assert r["argmin_matches_exhaustive"], \
             ("cascade pruned the true argmin", r)
@@ -263,6 +315,18 @@ def run(quick: bool = False, json_path: str | None = None,
             assert r["hier_wall_s"] < FLEET_WALL_BUDGET_S, \
                 (f"4096-device hierarchical plan exceeded the "
                  f"{FLEET_WALL_BUDGET_S:.0f}s budget", r)
+    # ISSUE 8 acceptance: cut-through pipelining strictly beats
+    # store-and-forward on the sparse torus, and mid-flight re-routing is
+    # live (the catalog trace splits at least one step) and deterministic
+    fid = [r for r in rows if r.get("kind") == "sim_fidelity"]
+    assert fid, rows
+    for r in fid:
+        assert r["pipelined_le_snf"], \
+            ("pipelined step estimate not below store-and-forward", r)
+        assert r["reroute_events"] >= 1 and r["reroute_steps"] >= 1, \
+            ("catalog trace produced no mid-flight re-routes", r)
+        assert r["reroute_moves_epoch"], \
+            ("mid-flight re-routing did not change the epoch outcome", r)
     # parallel gate: asserted only where the calibrated ceiling shows real
     # multicore headroom (same policy as the bench_scenarios gate)
     if ceiling >= 2.5:

@@ -64,13 +64,13 @@ def _payloads(quick: bool) -> list[tuple[HarnessConfig, str, int]]:
     # the longest-task bound cannot cap the parallel speedup below 2x
     max_candidates = 48 if quick else 96
     base = HarnessConfig(PAPER_MODELS["LLaMA_7B"], global_batch=64, seq=2048,
-                         max_candidates=max_candidates, n_workers=2)
+                         max_candidates=max_candidates)
     # comm-heavy scale for the crossover families: at global_batch=64 the
     # LLaMA-7B step is compute-bound and no bandwidth level flips the plan;
     # at 8 the cross-fabric gradient sync dominates and the fig6c crossover
     # sits inside the scenario's bandwidth swing
     tight = HarnessConfig(PAPER_MODELS["LLaMA_7B"], global_batch=8, seq=2048,
-                          max_candidates=max_candidates, n_workers=2)
+                          max_candidates=max_candidates)
     names = [n for n in _ORDER if n in list_scenarios()]
     names += [n for n in list_scenarios()
               if n not in names and not _is_crossover(n)]

@@ -189,6 +189,16 @@ SPECS: dict[str, BenchSpec] = {
             # within 10% of the untraced wall (min-of-2 timings both sides
             # keep shared-runner noise out of the ratio)
             Gate("trace_overhead", "max", ceil=1.10),
+            # fabric sim-fidelity (ISSUE 8): cut-through pipelining must
+            # stay strictly below store-and-forward on the sparse torus,
+            # the pipelined/S&F delta must not silently collapse, and the
+            # catalog-trace mid-flight re-route counters are deterministic
+            # pure float math — exact across hosts
+            Gate("pipelined_le_snf", "bool-true"),
+            Gate("pipeline_delta", "ratio-min", tol=0.05),
+            Gate("reroute_events", "equal"),
+            Gate("reroute_steps", "equal"),
+            Gate("reroute_moves_epoch", "bool-true"),
         ),
     ),
     "bench_replan": BenchSpec(

@@ -10,6 +10,8 @@ from .costmodel import (MeshCollectiveModel, allreduce_time, collective_time,
                         graph_compute_lower_bound, op_time, transfer_time)
 from .dynamic import (AdaptationRecord, DynamicOrchestrator, PlanTemplates,
                       reassign_for_straggler)
+from .fabric import (FabricModel, calibrated, default_fabric,
+                     set_default_fabric, use_fabric)
 from .engine import (CacheStats, HierarchicalReplanEngine,
                      HierarchicalReplanResult, ReplanEngine, ReplanResult,
                      StrategyCache, TopologyFingerprint, fingerprint_topology)

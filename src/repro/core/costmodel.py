@@ -22,6 +22,7 @@ from dataclasses import dataclass
 from typing import Sequence
 
 from .cluster import ClusterTopology, DeviceInstance, Edge
+from .fabric import default_fabric
 from .opgraph import CommOp, OpNode
 
 # ---------------------------------------------------------------------------
@@ -54,33 +55,27 @@ def graph_compute_lower_bound(total_flops: float,
 
 def _has_live_edge(topo: ClusterTopology, a: int, b: int) -> bool:
     """True iff the pair has a direct link with positive effective
-    bandwidth (a fully degraded link routes like a missing one)."""
-    link = topo.link(a, b)
-    return link is not None and any(e.effective_bandwidth > 0
-                                    for e in link.edges)
+    bandwidth (a fully degraded link routes like a missing one); alias of
+    the fabric layer's liveness predicate."""
+    from .fabric import _has_live_direct
+    return _has_live_direct(topo, a, b)
 
 
 def transfer_time(topo: ClusterTopology, a: int, b: int, size: float,
                   *, edge: Edge | None = None, routing=None) -> float:
     """T_comm(size, l_alpha): transfer over a selected physical edge.
 
-    Pairs without a live direct link are priced over the topology's widest
-    multi-hop route (:mod:`repro.core.routing`): store-and-forward, i.e.
-    the sum of per-hop latencies plus per-hop serialization — never below
-    any single hop's own time.  Unreachable pairs (partitioned cluster,
-    dead relay) price at ``inf``.  Hot loops pricing many pairs should
-    fetch ``topo.routing()`` once and pass it as ``routing`` — the cached
-    lookup re-checks the topology state signature per call."""
-    if a == b:
-        return 0.0
-    if edge is not None:
-        return edge.transfer_time(size)
-    if _has_live_edge(topo, a, b):
-        return topo.link(a, b).best_edge(size).transfer_time(size)
-    route = (routing if routing is not None else topo.routing()).route(a, b)
-    if route is None:
-        return math.inf
-    return route.transfer_time(size)
+    Thin delegate to the default :class:`repro.core.fabric.FabricModel` —
+    the single transfer-pricing implementation.  Pairs without a live
+    direct link are priced over the topology's widest multi-hop route
+    (:mod:`repro.core.routing`) with chunked cut-through pipelining:
+    never below any single hop's own time, never above the
+    store-and-forward sum of hops.  Unreachable pairs (partitioned
+    cluster, dead relay) price at ``inf``.  Hot loops pricing many pairs
+    should fetch ``topo.routing()`` once and pass it as ``routing`` — the
+    cached lookup re-checks the topology state signature per call."""
+    return default_fabric().transfer_time(topo, a, b, size,
+                                          edge=edge, routing=routing)
 
 
 # ---------------------------------------------------------------------------
@@ -91,35 +86,17 @@ def transfer_time(topo: ClusterTopology, a: int, b: int, size: float,
 def _bottleneck_bw(topo: ClusterTopology, ranks: Sequence[int]) -> tuple[float, float]:
     """(bandwidth, latency) of the slowest pair on the participant ring.
 
-    Pairs without a live direct link are priced at their widest route's
-    end-to-end bandwidth (``1 / sum(1/bw_hop)`` — relay hops serialize,
-    :mod:`repro.core.routing`) instead of the old flat min-cluster-bw
-    fallback, which was optimistic on sparse graphs and forced the coarse
-    search tier to disable its ring caps there.  A ring crossing a
-    partition (no route) returns bandwidth 0 — the collective is
-    unpriceable and the candidate infeasible."""
-    if len(ranks) < 2:
-        return math.inf, 0.0
-    bw = math.inf
-    lat = 0.0
-    n = len(ranks)
-    table = None          # fetched once: routing() re-checks the topology
-    #                       state signature per call, too hot for this loop
-    for i in range(n):
-        a, b = ranks[i], ranks[(i + 1) % n]
-        if _has_live_edge(topo, a, b):
-            e = topo.link(a, b).best_edge(1 << 20)
-            bw = min(bw, e.effective_bandwidth)
-            lat = max(lat, e.latency)
-            continue
-        if table is None:
-            table = topo.routing()
-        route = table.route(a, b)
-        if route is None:
-            return 0.0, 0.0
-        bw = min(bw, route.effective_bandwidth)
-        lat = max(lat, route.latency)
-    return bw, lat
+    Thin delegate to the default fabric's
+    :meth:`repro.core.fabric.FabricModel.ring_capacity`: relayed pairs
+    stream at their route's bottleneck rate (cut-through pipelining) but
+    share every physical link they relay over with the other ring pairs
+    routed across it — more faithful than the old independent
+    resistance-sum pricing (a streaming relay is not store-and-forward),
+    and never above any hop's bandwidth, which is what keeps the coarse
+    search tier's ring caps admissible.  A ring
+    crossing a partition (no route) returns bandwidth 0 — the collective
+    is unpriceable and the candidate infeasible."""
+    return default_fabric().ring_capacity(topo, ranks)
 
 
 def collective_time(topo: ClusterTopology, comm: CommOp) -> float:

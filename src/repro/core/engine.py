@@ -333,7 +333,6 @@ class ReplanEngine:
 
     def __init__(self, model: ModelDesc, *, global_batch: int, seq: int,
                  cache: StrategyCache | None = None,
-                 n_workers: int | None = None,
                  max_candidates: int | None = None, rescore_top_k: int = 12,
                  rescore_min_sims: int = 4, rescore_stop_margin: float = 1.35,
                  gpus_per_node: int = 8,
@@ -351,9 +350,6 @@ class ReplanEngine:
         self.obs = resolve_obs(obs)
         self.cache = cache if cache is not None \
             else StrategyCache(obs=self.obs)
-        # deprecated, kept for call-site compatibility: serial scoring needs
-        # no thread pool; process parallelism comes from ``executor``
-        self.n_workers = n_workers
         # a repro.core.search.SearchExecutor: full searches then score their
         # final simulation tier in worker processes (plan identity with the
         # serial path is guaranteed by the pipeline's canonical tie-break)

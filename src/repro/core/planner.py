@@ -30,7 +30,6 @@ import heapq
 import itertools
 import math
 import time
-import warnings
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Iterable, Mapping, Sequence
@@ -603,12 +602,11 @@ def materialize_plan(point: StrategyPoint, topo: ClusterTopology,
 # Default search-space knobs.  Test fixtures (tests/conftest.py) shrink these
 # so the tier-1 suite stays within its CI budget; explicit arguments win.
 DEFAULT_MAX_CANDIDATES = 512
-DEFAULT_N_WORKERS = 8
 
 
 def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
                 global_batch: int, seq: int, gpus_per_node: int = 8,
-                n_workers: int | None = None, with_baseline: bool = True,
+                with_baseline: bool = True,
                 max_candidates: int | None = None,
                 allow_subset: bool = True,
                 cache=None,
@@ -632,10 +630,6 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
         seq: sequence length.
         gpus_per_node: node size assumed by enumeration heuristics and the
             Megatron baselines (part of the cache-context identity).
-        n_workers: **deprecated and ignored** — serial scoring needs no
-            thread pool (the GIL made one useless); process parallelism
-            comes from ``executor``.  Passing a non-``None`` value emits a
-            :class:`DeprecationWarning`.
         with_baseline: also score the Megatron default + tuned-uniform
             baselines (fills ``baseline*`` / ``tuned_baseline*``).
         max_candidates: cap on the enumerated candidate list (default
@@ -681,11 +675,6 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
             factorization divides.
     """
     from . import search as search_mod  # deferred: search imports planner
-    if n_workers is not None:
-        warnings.warn(
-            "plan_hybrid(n_workers=...) is ignored; pass "
-            "executor=SearchExecutor(...) for process-parallel scoring",
-            DeprecationWarning, stacklevel=2)
     t0 = time.perf_counter()
     obs = resolve_obs(obs)
     plan_span = obs.span("plan.hybrid", devices=len(topo.alive_ids()),

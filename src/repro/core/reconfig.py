@@ -42,7 +42,7 @@ from dataclasses import dataclass
 from typing import Callable, Sequence
 
 from .cluster import ClusterTopology
-from .costmodel import _has_live_edge, transfer_time
+from .costmodel import transfer_time
 from .opgraph import ModelDesc
 from .plans import ParallelPlan, split_devices, uniform_stages
 
@@ -286,21 +286,14 @@ class ReconfigCostModel:
     @staticmethod
     def _path_time(topo: ClusterTopology, a: int, b: int, size: float,
                    *, routing=None) -> tuple[float, float]:
-        """(seconds, bandwidth) for one transfer.  Pairs without a live
-        direct link are priced on their widest multi-hop route's
-        store-and-forward time and end-to-end bandwidth
-        (:mod:`repro.core.routing`) — no more cluster-wide bottleneck
-        constant.  Unreachable pairs return ``(inf, 0.0)``; callers fall
-        back to the host store."""
-        if _has_live_edge(topo, a, b):
-            link = topo.link(a, b)
-            return (link.best_edge(size).transfer_time(size),
-                    max(e.effective_bandwidth for e in link.edges))
-        table = routing if routing is not None else topo.routing()
-        route = table.route(a, b)
-        if route is None:
-            return math.inf, 0.0
-        return route.transfer_time(size), route.effective_bandwidth
+        """(seconds, bandwidth) for one transfer — thin delegate to the
+        default fabric's :meth:`repro.core.fabric.FabricModel.path_time`.
+        Pairs without a live direct link are priced on their widest
+        multi-hop route with chunked cut-through pipelining; unreachable
+        pairs return ``(inf, 0.0)`` and callers fall back to the host
+        store."""
+        from .fabric import default_fabric
+        return default_fabric().path_time(topo, a, b, size, routing=routing)
 
     def cost(self, old: ParallelPlan, new: ParallelPlan,
              topo: ClusterTopology) -> ReconfigCost:

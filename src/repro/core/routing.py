@@ -14,24 +14,29 @@ This module gives :class:`~repro.core.cluster.ClusterTopology` a cached
   * a :class:`Route` carries the physical path plus three pricing
     aggregates: ``bottleneck_bw`` (min hop bandwidth — what the coarse
     bound's connectivity caps reason about), ``latency`` (sum of hop
-    latencies) and ``resistance`` (sum of inverse hop bandwidths).  The
-    store-and-forward transfer time ``latency + size * resistance`` equals
-    the sum of per-hop transfer times, so a routed price is never below any
-    single hop's own serialization-aware time;
+    latencies) and ``resistance`` (sum of inverse hop bandwidths).  Those
+    three are exactly what :class:`repro.core.fabric.FabricModel` needs to
+    price the route — chunked cut-through pipelining by default
+    (``latency + fill + size/bottleneck``), the store-and-forward sum
+    ``latency + size * resistance`` as the un-pipelined reference.  Either
+    way a routed price is never below any single hop's own
+    serialization-aware time;
   * tables are built lazily per source (Dijkstra-style widest path,
     O(E log V) per source) and cached per topology state — the topology's
     existing snapshot version/signature mechanism invalidates them, so
     dynamic events (link death, degradation, device fail/join) re-route
     mid-trace.
 
-Consumers: :func:`repro.core.costmodel.transfer_time` (routed p2p),
-:func:`repro.core.costmodel._bottleneck_bw` (routed ring collectives),
-:meth:`repro.core.reconfig.ReconfigCostModel` (routed reshard pairs), and
-the discrete-event simulator (per-hop transfers claiming each physical
-edge's serialization domain — relay traffic contends with direct traffic).
-The coarse search tier computes its sparse-graph ring caps from the direct
-link graph, but their *admissibility* rests on the routed-pricing invariant
-above: a routed pair's end-to-end bandwidth never exceeds any hop's.
+Consumers: :class:`repro.core.fabric.FabricModel` — the single transfer
+pricing implementation behind :func:`repro.core.costmodel.transfer_time`
+(routed p2p), :func:`repro.core.costmodel._bottleneck_bw` (routed ring
+collectives), :meth:`repro.core.reconfig.ReconfigCostModel` (routed
+reshard pairs) and the discrete-event simulator (per-hop transfers
+claiming each physical edge's serialization domain — relay traffic
+contends with direct traffic).  The coarse search tier computes its
+sparse-graph ring caps from the direct link graph, but their
+*admissibility* rests on the routed-pricing invariant above: a routed
+pair's end-to-end bandwidth never exceeds its bottleneck hop's.
 """
 
 from __future__ import annotations
@@ -59,18 +64,21 @@ class Route:
 
     @property
     def effective_bandwidth(self) -> float:
-        """End-to-end store-and-forward bandwidth: ``1 / resistance``.
-        Never exceeds :attr:`bottleneck_bw`; equals it for single-hop
-        routes."""
+        """End-to-end *store-and-forward* bandwidth: ``1 / resistance``.
+        Kept as the un-pipelined reference aggregate (and the pre-fabric
+        pricing, via ``FabricModel(pipelining=False)``); never exceeds
+        :attr:`bottleneck_bw`, equals it for single-hop routes."""
         if self.resistance <= 0:
             return math.inf
         return 1.0 / self.resistance
 
     def transfer_time(self, size_bytes: float) -> float:
-        """Sum of per-hop transfer times (store-and-forward, no pipelining):
-        each relay fully receives before it forwards, so the routed price
-        is >= every single hop's own time."""
-        return self.latency + size_bytes * self.resistance
+        """Thin delegate to the default fabric's routed pricing
+        (:meth:`repro.core.fabric.FabricModel.route_time`): chunked
+        cut-through pipelining by default, never below any single hop's
+        own time, never above the store-and-forward sum of hops."""
+        from .fabric import default_fabric
+        return default_fabric().route_time(self, size_bytes)
 
 
 class RoutingTable:
@@ -110,6 +118,13 @@ class RoutingTable:
         # src -> (best: node -> (bw, hops), prev: node -> predecessor)
         self._trees: dict[int, tuple[dict, dict]] = {}
         self._routes: dict[tuple[int, int], Route | None] = {}
+
+    def hop_price(self, u: int, v: int) -> tuple[float, float] | None:
+        """(bandwidth, latency) of the best live edge this table priced the
+        direct hop ``u``-``v`` at, or ``None`` when the pair has no live
+        direct link.  The fabric's ring-capacity load accounting uses this
+        so collective pricing sees exactly the edges the routes priced."""
+        return self._pair.get((min(u, v), max(u, v)))
 
     # -- widest-path trees -----------------------------------------------------
 

@@ -49,6 +49,7 @@ from typing import Sequence
 
 from ..obs import Obs, resolve_obs
 from .cluster import ClusterTopology
+from .fabric import default_fabric, set_default_fabric
 from .opgraph import ModelDesc
 from .planner import (SearchStats, StrategyPoint, materialize_plan,
                       point_lower_bound)
@@ -161,15 +162,25 @@ def _bound_context(topo: ClusterTopology, model: ModelDesc, *,
     # out.
     #
     # On a sparse link graph (TPU torus) a ring pair without a direct link
-    # is priced at its widest route's end-to-end bandwidth
-    # (repro.core.routing), which never exceeds ANY hop's bandwidth.  That
-    # keeps (b) sound (a routed pair's first hop is incident to the
-    # member, so its price <= the member's best incident link) and (c)
-    # sound (every hop of every ring route with price >= B lies in the
-    # >=B subgraph, so the g members share a component there).  Cap (a)
-    # does NOT survive routing — g routed pairs may share one fast
-    # physical edge (e.g. a line graph's wrap-around pair reuses every
-    # link) — so it applies on complete graphs only.
+    # is priced by the fabric's ring_capacity (repro.core.fabric): the
+    # pair streams cut-through chunks at its route's bottleneck rate,
+    # divided by how many ring pairs share each directed physical link.
+    # That price never exceeds ANY hop's own bandwidth (load >= 1), which
+    # is the invariant both surviving caps rest on: (b) stays sound (a
+    # routed pair's first hop is incident to the member, so its price <=
+    # the member's best incident link) and (c) stays sound (a pair priced
+    # >= B has every hop's bandwidth >= B, so its whole route lies in the
+    # >=B subgraph and the g members share a component there).  The old
+    # store-and-forward resistance-sum argument (price <= 1/sum(1/bw))
+    # was *stronger* than needed and no longer holds under pipelining;
+    # only the per-hop form above is load-bearing.  Cap (a) does NOT
+    # survive routing — g routed pairs may share one fast physical edge
+    # (e.g. a line graph's wrap-around pair reuses every link) — so it
+    # applies on complete graphs only.  NOTE: admissibility compares raw
+    # edge bandwidths against the beta-scaled simulator; a calibrated
+    # fabric with beta > 1 would price sims *below* the raw-bandwidth
+    # caps, so tools/calibrate_fabric.py clamps beta <= 1 (physical
+    # efficiency) and the never-over-prune property test guards the rest.
     pair_bws = sorted(pair_best.values(), reverse=True)
     dev_bws = sorted(incident.values(), reverse=True)
     n = len(alive)
@@ -413,10 +424,16 @@ def _pool_warm(_: int) -> int:
 
 def _load_search_ctx(token: str, blob: bytes) -> tuple:
     """(topo, model, global_batch, seq), unpickled once per worker per
-    search — chunks of the same search reuse it (amortized setup)."""
+    search — chunks of the same search reuse it (amortized setup).  The
+    parent's default :class:`repro.core.fabric.FabricModel` rides along and
+    is installed as this worker's default, so serial and process-parallel
+    searches price identically even under a non-default calibration (the
+    token hashes the blob, so a fabric change forces a context reload)."""
     global _CTX_TOKEN, _CTX_STATE, _CTX_MEMO
     if token != _CTX_TOKEN:
-        _CTX_STATE = pickle.loads(blob)
+        *state, fabric = pickle.loads(blob)
+        set_default_fabric(fabric)
+        _CTX_STATE = tuple(state)
         _CTX_TOKEN = token
         _CTX_MEMO = {}
     return _CTX_STATE  # type: ignore[return-value]
@@ -559,7 +576,8 @@ class SearchExecutor:
         current span (one Perfetto lane per worker process)."""
         obs = resolve_obs(obs)
         pool = self._ensure()
-        blob = pickle.dumps((topo, model, global_batch, seq),
+        blob = pickle.dumps((topo, model, global_batch, seq,
+                             default_fabric()),
                             protocol=pickle.HIGHEST_PROTOCOL)
         token = hashlib.sha1(blob).hexdigest()
         assert self._bound is not None
@@ -603,7 +621,8 @@ class SearchExecutor:
         if not plans:
             return []
         pool = self._ensure()
-        blob = pickle.dumps((topo, model, global_batch, seq),
+        blob = pickle.dumps((topo, model, global_batch, seq,
+                             default_fabric()),
                             protocol=pickle.HIGHEST_PROTOCOL)
         token = hashlib.sha1(blob).hexdigest()
         n_chunks = max(1, min(len(plans), self.n_procs))
@@ -713,67 +732,76 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
     tier3 = obs.span("search.tier3", n_tasks=len(tasks),
                      parallel=executor is not None and len(tasks) > 1)
     tier3.__enter__()
+    # Worker pre-pass (performance only): ship the likely-live work to the
+    # pool so the sims are hot when the canonical walk below needs them.
+    # The walk is the sole authority on outcomes, session-cache content,
+    # and stats — worker results are consumed as a sim cache, gaps (tasks a
+    # racing shared bound pruned that the walk's threshold admits) are
+    # scored in the parent, and worker sims the walk prunes are discarded.
+    # That keeps serial and process-parallel searches plan-for-plan AND
+    # portfolio-for-portfolio identical whatever the chunk completion
+    # order; the shared bound only decides how much worker time is spent.
+    available: dict[int, tuple[ParallelPlan, StepSim]] = {}
     if executor is not None and len(tasks) > 1:
         # resolve session-cache hits in the parent first: they are free and
-        # pre-tighten the bound the workers start from
+        # pre-tighten the static bound the workers start from
+        hit_times: list[float] = []
         pending: list[tuple[float, int, StrategyPoint, bool]] = []
         for bound, index, point, refine in tasks:
             plan = ctx.get_plan(point, refine) if ctx is not None else None
             sim = ctx.get_score(plan) \
                 if (plan is not None and ctx is not None) else None
             if plan is not None and sim is not None:
-                note(index, point, refine, plan, sim)
+                hit_times.append(sim.step_time)
             else:
                 pending.append((bound, index, point, refine))
-        thr = threshold()
-        live = [t for t in pending if not (prune and t[0] > thr)]
-        _note_pruned(stats, obs, "coarse", len(pending) - len(live))
+        thr0 = math.inf
+        if prune and len(hit_times) >= keep_top_k:
+            thr0 = sorted(hit_times)[keep_top_k - 1]
+        live = [t for t in pending if not (prune and t[0] > thr0)]
         if max_sims is not None:
-            budget = max(0, max_sims - len(sim_times))
-            if len(live) > budget:
-                # tasks are bound-sorted: the kept prefix is the most
-                # promising; the tail is skipped, not (soundly) pruned
-                stats.budget_skipped += len(live) - budget
-                obs.inc("search.budget_skipped", len(live) - budget)
-                live = live[:budget]
+            # dispatch cap only — the walk does the budget accounting
+            live = live[:max(0, max_sims - len(hit_times))]
         if live:
-            out, rejected, pruned = executor.run(
+            out, _rejected, _pruned = executor.run(
                 topo, model, global_batch=global_batch, seq=seq,
-                tasks=live, threshold=thr, tighten=(keep_top_k == 1),
+                tasks=live, threshold=thr0, tighten=(keep_top_k == 1),
                 obs=obs)
-            stats.rejected += rejected
-            _note_pruned(stats, obs, "coarse", pruned)
             for index, point, refine, plan, sim in out:
-                # merge the worker's cache delta into the session cache
-                if ctx is not None:
-                    ctx.put_plan(point, refine, plan)
-                    ctx.put_score(plan, sim)
-                note(index, point, refine, plan, sim)
-    else:
-        memo: dict = {}
-        for bound, index, point, refine in tasks:
-            if max_sims is not None and len(sim_times) >= max_sims:
-                stats.budget_skipped += 1
-                obs.inc("search.budget_skipped")
-                continue
-            thr = threshold()
-            if prune and bound > thr:
-                # attribute the cut to the tier whose bound did it
-                if point_lower_bound(point, topo, model,
-                                     global_batch=global_batch,
-                                     seq=seq) > thr:
-                    _note_pruned(stats, obs, "bound", 1)
-                else:
-                    _note_pruned(stats, obs, "coarse", 1)
-                continue
-            res = _score_variant(point, refine, topo, model,
-                                 global_batch=global_batch, seq=seq,
-                                 ctx=ctx, memo=memo if ctx is None else None,
-                                 obs=obs)
-            if res is None:
-                stats.rejected += 1
-                continue
-            note(index, point, refine, res[0], res[1])
+                available[index] = (plan, sim)
+    memo: dict = {}
+    for bound, index, point, refine in tasks:
+        if max_sims is not None and len(sim_times) >= max_sims:
+            stats.budget_skipped += 1
+            obs.inc("search.budget_skipped")
+            continue
+        thr = threshold()
+        if prune and bound > thr:
+            # attribute the cut to the tier whose bound did it
+            if point_lower_bound(point, topo, model,
+                                 global_batch=global_batch,
+                                 seq=seq) > thr:
+                _note_pruned(stats, obs, "bound", 1)
+            else:
+                _note_pruned(stats, obs, "coarse", 1)
+            continue
+        got = available.get(index)
+        if got is not None:
+            plan, sim = got
+            # merge the worker's result into the session cache
+            if ctx is not None:
+                ctx.put_plan(point, refine, plan)
+                ctx.put_score(plan, sim)
+            note(index, point, refine, plan, sim)
+            continue
+        res = _score_variant(point, refine, topo, model,
+                             global_batch=global_batch, seq=seq,
+                             ctx=ctx, memo=memo if ctx is None else None,
+                             obs=obs)
+        if res is None:
+            stats.rejected += 1
+            continue
+        note(index, point, refine, res[0], res[1])
     tier3.set(simulated=stats.simulated)
     tier3.__exit__(None, None, None)
 

@@ -36,6 +36,7 @@ from typing import Callable, Mapping, Sequence
 
 from .cluster import ClusterTopology, DeviceInstance, Edge, NetworkEvent
 from .costmodel import _has_live_edge, collective_time, op_time, transfer_time
+from .fabric import default_fabric
 from .opgraph import CommOp, ModelDesc, OpGraph, layer_flops
 from .plans import ParallelPlan
 
@@ -110,7 +111,8 @@ def simulate_schedule(graph: OpGraph, assignment: Mapping[str, int],
                       topo: ClusterTopology, *,
                       priority: Sequence[str] | None = None,
                       apply_events: bool = True,
-                      start_time: float = 0.0) -> SimResult:
+                      start_time: float = 0.0,
+                      obs=None) -> SimResult:
     """Event-driven simulation of ``graph`` under ``assignment``.
 
     Ops on one device run serially in ready order (ties broken by the given
@@ -118,7 +120,16 @@ def simulate_schedule(graph: OpGraph, assignment: Mapping[str, int],
     transfer that must win exclusive use of one physical edge; conflicting
     edge tags (paper Fig. 5b) share a serialization domain.  Dynamic
     bandwidth events re-rate in-flight transfers at their event time.
+
+    Relayed transfers pipeline cut-through chunks through the default
+    :class:`repro.core.fabric.FabricModel` (every hop still claims its
+    physical edge, so relay traffic serializes against direct traffic);
+    ``obs`` records ``fabric.relays`` / ``fabric.relay_hops`` /
+    ``fabric.chunks`` counters (no-op by default).
     """
+    from ..obs import resolve_obs
+    obs = resolve_obs(obs)
+    fabric = default_fabric()
     topo = topo.snapshot(start_time) if apply_events else topo
     order = priority or graph.topo_order()
     rank = {n: i for i, n in enumerate(order)}
@@ -143,6 +154,17 @@ def simulate_schedule(graph: OpGraph, assignment: Mapping[str, int],
     n_preds = {v: len(graph.preds(v)) for v in graph.nodes}
     done_preds = {v: 0 for v in graph.nodes}
 
+    def hop_earliest(link, key: tuple[int, int], e: Edge, cls: _EdgeClass,
+                     not_before: float) -> float:
+        """Earliest start on one physical edge: queueing behind the edge's
+        own traffic plus its conflict partners (they serialize together)."""
+        conflict_free = max(
+            [classes[(key[0], key[1], o.tag)].free_at
+             for o in link.edges
+             if o.tag in e.conflicts_with or e.tag in o.conflicts_with],
+            default=0.0)
+        return max(not_before, cls.free_at, conflict_free)
+
     def hop_ready(a: int, b: int, size: float,
                   not_before: float) -> tuple[float, float, _EdgeClass]:
         """(start, end, edge_class) for the best physical edge on the
@@ -152,14 +174,8 @@ def simulate_schedule(graph: OpGraph, assignment: Mapping[str, int],
         best = None
         for e in link.edges:
             cls = classes[(key[0], key[1], e.tag)]
-            # conflicting edges on this link serialize together
-            conflict_free = max(
-                [classes[(key[0], key[1], o.tag)].free_at
-                 for o in link.edges
-                 if o.tag in e.conflicts_with or e.tag in o.conflicts_with],
-                default=0.0)
-            st = max(not_before, cls.free_at, conflict_free)
-            en = st + e.transfer_time(size)
+            st = hop_earliest(link, key, e, cls, not_before)
+            en = st + fabric.edge_time(e, size)
             if best is None or en < best[1]:
                 best = (st, en, cls)
         return best  # type: ignore[return-value]
@@ -169,13 +185,18 @@ def simulate_schedule(graph: OpGraph, assignment: Mapping[str, int],
         """(start, end, claims) for one logical transfer.
 
         Direct pairs pick the best physical edge on their link.  Pairs
-        without a live direct link relay hop-by-hop along the cached widest
-        route (:mod:`repro.core.routing`), store-and-forward: every hop
-        claims its physical edge's serialization domain, so relay traffic
-        contends with direct traffic on the same links (paper Fig. 5b
-        generalized).  ``claims`` are (edge_class, busy_until) pairs the
-        caller commits once the transfer is scheduled.  Unroutable pairs
-        (partitioned cluster) finish at ``inf``."""
+        without a live direct link relay cut-through chunks hop-by-hop
+        along the cached widest route (:mod:`repro.core.routing`) via the
+        fabric's relay recursion — hop ``h`` finishes once it has
+        serialized all chunks *and* the last chunk has arrived from hop
+        ``h-1``, so on an uncontended fabric the final hop's end equals
+        :meth:`repro.core.fabric.FabricModel.route_time`'s closed form.
+        Every hop still claims its physical edge's serialization domain,
+        so relay traffic contends with direct traffic on the same links
+        (paper Fig. 5b generalized).  ``claims`` are (edge_class,
+        busy_until) pairs the caller commits once the transfer is
+        scheduled.  Unroutable pairs (partitioned cluster) finish at
+        ``inf``."""
         if a == b:
             return not_before, not_before, []
         if _has_live_edge(topo, a, b):
@@ -184,16 +205,32 @@ def simulate_schedule(graph: OpGraph, assignment: Mapping[str, int],
         route = route_table.route(a, b)
         if route is None:
             return not_before, math.inf, []
-        t = not_before
+        first_chunk_at = not_before
+        prev_end: float | None = None
         st0 = not_before
         claims: list[tuple[_EdgeClass, float]] = []
         for hi, (u, v) in enumerate(zip(route.path, route.path[1:])):
-            st, en, cls = hop_ready(u, v, size, t)
+            link = topo.link(u, v)
+            key = (min(u, v), max(u, v))
+            best = None
+            for e in link.edges:
+                cls = classes[(key[0], key[1], e.tag)]
+                st = hop_earliest(link, key, e, cls, first_chunk_at)
+                en, nxt = fabric.relay_step(
+                    size, e.effective_bandwidth, e.latency,
+                    st, first_chunk_at, prev_end)
+                if best is None or en < best[0]:
+                    best = (en, st, nxt, cls)
+            en, st, nxt, cls = best  # type: ignore[misc]
             if hi == 0:
                 st0 = st
             claims.append((cls, en))
-            t = en
-        return st0, t, claims
+            prev_end = en
+            first_chunk_at = nxt
+        obs.inc("fabric.relays")
+        obs.inc("fabric.relay_hops", len(claims))
+        obs.inc("fabric.chunks", fabric.chunks(size))
+        return st0, prev_end, claims  # type: ignore[return-value]
 
     # Kahn-style scheduling loop: repeatedly place the ready op whose device
     # is available earliest; deterministic by (ready-rank) priority.
@@ -516,16 +553,31 @@ def simulate_epoch(plan: ParallelPlan, model: ModelDesc, topo: ClusterTopology,
                    *, global_batch: int, seq: int, steps: int,
                    replan_fn: Callable[[ClusterTopology, float],
                                        ParallelPlan] | None = None,
-                   reconfig: "object | None" = None) -> EpochSim:
+                   reconfig: "object | None" = None,
+                   reroute_in_flight: bool = True,
+                   obs=None) -> EpochSim:
     """Simulate ``steps`` optimizer steps over the temporal topology.
 
-    Events fire between steps; if ``replan_fn`` is given, topology changes
-    trigger re-planning.  A re-plan that actually *switches* plans is charged
+    With ``reroute_in_flight`` (the default), a bandwidth/link event that
+    lands *inside* a step no longer waits for the step boundary: the step
+    is split at the event time, and the remaining fraction of its work is
+    re-priced on the post-event topology snapshot — in-flight relayed
+    transfers see the post-event routing table instead of holding the
+    stale route (a degraded relay slows the step remainder immediately; a
+    recovered link speeds it up).  ``reroute_in_flight=False`` restores
+    the old boundary-only semantics.  ``obs`` records
+    ``sim.reroute.events`` (events applied mid-step) and
+    ``sim.reroute.steps`` (steps split at least once).
+
+    If ``replan_fn`` is given, topology changes trigger re-planning at the
+    next step boundary.  A re-plan that actually *switches* plans is charged
     the physically-modeled checkpoint/reshard cost (checkpoint bytes,
     reshard traffic, post-event bandwidths) through ``reconfig`` — a
     :class:`repro.core.reconfig.ReconfigCostModel`, built from ``model``
     when not supplied.  Re-plans that keep the incumbent cost nothing."""
+    from ..obs import resolve_obs
     from .reconfig import ReconfigCostModel
+    obs = resolve_obs(obs)
     if reconfig is None:
         reconfig = ReconfigCostModel(model)
     t = 0.0
@@ -535,9 +587,9 @@ def simulate_epoch(plan: ParallelPlan, model: ModelDesc, topo: ClusterTopology,
     current = plan
     pending = sorted(topo.events, key=lambda e: e.time)
     ei = 0
+    fired = False      # events seen since the last re-plan opportunity
     for _ in range(steps):
-        # apply any events that fired
-        fired = False
+        # apply any events that fired at / before the step boundary
         while ei < len(pending) and pending[ei].time <= t:
             fired = True
             ei += 1
@@ -550,10 +602,33 @@ def simulate_epoch(plan: ParallelPlan, model: ModelDesc, topo: ClusterTopology,
                 reconfig_s += charge
             current = new
             replans += 1
+            fired = False
         sim = simulate_training_step(current, model, topo,
                                      global_batch=global_batch, seq=seq,
                                      at_time=t)
-        times.append(sim.step_time)
-        t += sim.step_time
+        step_t = sim.step_time
+        cur, frac = t, 1.0
+        split = False
+        if reroute_in_flight:
+            while (ei < len(pending) and math.isfinite(step_t) and step_t > 0
+                   and pending[ei].time < cur + frac * step_t):
+                tau = pending[ei].time
+                # progress made on the pre-event pricing, then re-price the
+                # remaining work fraction on the post-event snapshot
+                frac -= (tau - cur) / step_t
+                cur = tau
+                while ei < len(pending) and pending[ei].time <= tau:
+                    ei += 1
+                    fired = True
+                    split = True
+                    obs.inc("sim.reroute.events")
+                step_t = simulate_training_step(
+                    current, model, topo, global_batch=global_batch,
+                    seq=seq, at_time=tau).step_time
+        if split:
+            obs.inc("sim.reroute.steps")
+        step_time = (cur + frac * step_t) - t
+        times.append(step_time)
+        t += step_time
     return EpochSim(total_time=t, steps=steps, step_times=times,
                     replans=replans, reconfig_s=reconfig_s)

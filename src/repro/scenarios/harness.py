@@ -66,7 +66,6 @@ class HarnessConfig:
     global_batch: int
     seq: int
     max_candidates: int | None = None
-    n_workers: int | None = None
     # switch-cost model: checkpoint/reshard traffic priced on the post-event
     # topology (cf. the Oobleck/ReCycle reconfiguration-cost discussion,
     # paper §2.2.2).  None builds the default model from ``model``.
@@ -245,8 +244,7 @@ def _oracle_policies(cfg: HarnessConfig, topo: ClusterTopology,
     engine = ReplanEngine(cfg.model, global_batch=cfg.global_batch,
                           seq=cfg.seq, cache=StrategyCache(obs=NULL_OBS),
                           max_candidates=cfg.max_candidates,
-                          n_workers=cfg.n_workers, reconfig=reconfig,
-                          executor=executor,
+                          reconfig=reconfig, executor=executor,
                           plan_top_k=max(1, cfg.dp_top_k), obs=NULL_OBS)
     snaps = [topo.snapshot(t) for t in boundaries]
     winners: list[ParallelPlan | None] = []
@@ -386,7 +384,7 @@ def _run_scenario_inner(cfg: HarnessConfig, trace: Trace,
     engine = ReplanEngine(cfg.model, global_batch=cfg.global_batch,
                           seq=cfg.seq, cache=StrategyCache(obs=obs),
                           max_candidates=cfg.max_candidates,
-                          n_workers=cfg.n_workers, reconfig=reconfig,
+                          reconfig=reconfig,
                           switch_horizon_s=horizon, executor=executor,
                           obs=obs)
     orch = DynamicOrchestrator(model=cfg.model, global_batch=cfg.global_batch,
@@ -603,12 +601,11 @@ class ScenarioHarness:
 
     def __init__(self, model: ModelDesc, *, global_batch: int, seq: int,
                  max_candidates: int | None = None,
-                 n_workers: int | None = None,
                  reconfig: ReconfigCostModel | None = None,
                  oracle: bool = True, obs: Obs | None = None):
         self.cfg = HarnessConfig(
             model=model, global_batch=global_batch, seq=seq,
-            max_candidates=max_candidates, n_workers=n_workers,
+            max_candidates=max_candidates,
             reconfig=reconfig, oracle=oracle, obs=obs)
 
     def run(self, scenario: str | Trace, seed: int = 0,

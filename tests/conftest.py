@@ -2,7 +2,7 @@
 
 Keeps the planner's default search spaces small during tests so the tier-1
 (``-m "not slow"``) subset stays within its CI budget.  Tests that pass
-``max_candidates`` / ``n_workers`` explicitly are unaffected, as is
+``max_candidates`` explicitly are unaffected, as is
 production code (the defaults are only shrunk for the test session).
 """
 
@@ -14,4 +14,3 @@ def _small_search_spaces(monkeypatch):
     from repro.core import planner
 
     monkeypatch.setattr(planner, "DEFAULT_MAX_CANDIDATES", 96)
-    monkeypatch.setattr(planner, "DEFAULT_N_WORKERS", 4)

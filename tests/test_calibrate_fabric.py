@@ -1,0 +1,106 @@
+"""Fabric calibration fit math (ISSUE 8 tentpole closer): pure-stdlib
+least squares + roofline + gate, unit-tested without JAX (the sweep side
+is exercised by running the tool; the fit side is what the sim depends
+on)."""
+
+import json
+import random
+
+import pytest
+
+from tools.calibrate_fabric import (fit_alpha_beta, fit_report, main,
+                                    predict_step, roofline_terms)
+
+
+def _synthetic(alpha, beta, *, noise=0.0, seed=0, n=24):
+    rng = random.Random(seed)
+    samples = []
+    for _ in range(n):
+        # log-uniform: small sizes keep the latency term identifiable
+        size = 10.0 ** rng.uniform(2, 8)
+        bw = rng.choice([10e9, 25e9, 100e9])
+        lat = rng.choice([1e-6, 5e-6, 2e-5])
+        t = alpha * lat + size / (beta * bw)
+        t *= 1.0 + rng.uniform(-noise, noise)
+        samples.append({"size": size, "bw": bw, "lat": lat, "t": t})
+    return samples
+
+
+def test_fit_recovers_known_calibration():
+    a, b = fit_alpha_beta(_synthetic(1.8, 0.6))
+    assert a == pytest.approx(1.8, rel=1e-9)
+    assert b == pytest.approx(0.6, rel=1e-9)
+
+
+def test_fit_is_stable_under_noise():
+    a, b = fit_alpha_beta(_synthetic(1.5, 0.8, noise=0.05, seed=3))
+    assert a == pytest.approx(1.5, rel=0.25)
+    assert b == pytest.approx(0.8, rel=0.1)
+
+
+def test_fit_clamps_beta_for_admissibility():
+    """A machine beating its nominal bandwidth must not calibrate the sim
+    below the search tier's coarse caps: beta is capped at 1."""
+    a, b = fit_alpha_beta(_synthetic(1.0, 1.4))
+    assert b == 1.0
+    # ... unless the caller raises the ceiling explicitly
+    a2, b2 = fit_alpha_beta(_synthetic(1.0, 1.4), clamp_beta=2.0)
+    assert b2 == pytest.approx(1.4, rel=1e-9)
+
+
+def test_fit_rejects_empty_and_survives_degenerate_sweeps():
+    with pytest.raises(ValueError):
+        fit_alpha_beta([])
+    # one repeated (size, lat) point: rank-deficient normal equations fall
+    # back to the bandwidth-only fit instead of dividing by ~zero
+    s = [{"size": 1e6, "bw": 10e9, "lat": 0.0, "t": 2e-4}] * 4
+    a, b = fit_alpha_beta(s)
+    assert 0 < b <= 1.0
+
+
+def test_roofline_terms_report_per_class_peaks():
+    samples = [
+        {"size": 1e6, "bw": 10e9, "lat": 0, "t": 1e-6 + 1e6 / 8e9,
+         "cls": "host"},
+        {"size": 1e8, "bw": 10e9, "lat": 0, "t": 1e8 / 9e9, "cls": "host"},
+        {"size": 1e8, "bw": 100e9, "lat": 0, "t": 1e8 / 50e9, "cls": "ib",
+         "flops": 2e11},
+    ]
+    rows = roofline_terms(samples)
+    assert rows["host"]["peak_bw"] == pytest.approx(9e9)
+    assert rows["host"]["bw_eff"] == pytest.approx(0.9)
+    assert rows["ib"]["peak_bw"] == pytest.approx(50e9)
+    assert rows["ib"]["bw_eff"] == pytest.approx(0.5)
+    assert rows["ib"]["peak_flops"] == pytest.approx(2e11 / (1e8 / 50e9))
+
+
+def test_fit_report_gates_step_error():
+    samples = _synthetic(1.0, 0.9, seed=7)
+    good = predict_step(samples, *fit_alpha_beta(samples))
+    rep = fit_report(samples, gate=0.25, measured_step=good * 1.1)
+    assert rep["step"]["passed"]
+    rep = fit_report(samples, gate=0.25, measured_step=good * 2.0)
+    assert not rep["step"]["passed"]
+    assert rep["beta"] == pytest.approx(0.9, rel=1e-9)
+
+
+def test_cli_fit_only_roundtrip(tmp_path, capsys):
+    samples = _synthetic(1.2, 0.7, seed=1)
+    src = tmp_path / "sweep.json"
+    src.write_text(json.dumps({"samples": samples}))
+    out = tmp_path / "calib.json"
+    assert main(["--fit-only", str(src), "--out", str(out)]) == 0
+    rep = json.loads(out.read_text())["report"]
+    assert rep["alpha"] == pytest.approx(1.2, rel=1e-6)
+    assert rep["beta"] == pytest.approx(0.7, rel=1e-6)
+    assert "alpha=1.2" in capsys.readouterr().out
+
+
+def test_cli_gate_failure_exits_nonzero(tmp_path):
+    samples = _synthetic(1.0, 0.9, seed=5)
+    good = predict_step(samples, *fit_alpha_beta(samples))
+    src = tmp_path / "sweep.json"
+    src.write_text(json.dumps({"samples": samples,
+                               "measured_step": good * 10}))
+    assert main(["--fit-only", str(src), "--gate", "0.25"]) == 1
+    assert main(["--fit-only", str(src), "--no-gate"]) == 0

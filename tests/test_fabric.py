@@ -1,0 +1,389 @@
+"""Unified fabric layer (ISSUE 8): one routed-transfer pricing
+implementation behind :func:`repro.core.costmodel.transfer_time`, the
+simulator's relay, reconfig's reshard pricing and
+:meth:`repro.core.routing.Route.transfer_time`.
+
+Covers the cross-path pricing-consistency regression (all four former
+implementations must return the *same number* on the same topology), the
+cut-through invariants over deterministic randomized sparse graphs (the
+hypothesis twin lives in ``test_property_planner.py``), the closed-form ==
+relay-recursion identity, ring-capacity semantics, and mid-flight
+re-routing inside :func:`repro.core.simulator.simulate_epoch` — including
+the catalog-trace outcome it changes.
+"""
+
+import math
+import random
+
+import pytest
+
+from repro.core import (DEVICE_PROFILES, ClusterTopology, DeviceInstance,
+                        Edge, FabricModel, ModelDesc, NetworkEvent, OpGraph,
+                        OpNode, allreduce_time, calibrated, default_fabric,
+                        megatron_default_plan, set_default_fabric,
+                        simulate_epoch, simulate_schedule,
+                        simulate_training_step, transfer_time, use_fabric)
+from repro.core.costmodel import _bottleneck_bw
+from repro.core.reconfig import ReconfigCostModel
+from repro.core.routing import Route
+from repro.obs import Obs
+from repro.scenarios.catalog import build
+
+DESC = ModelDesc(name="m", n_layers=8, d_model=1024, n_heads=16,
+                 n_kv_heads=16, d_ff=4096, vocab=32000)
+
+V100 = DEVICE_PROFILES["V100"]
+
+
+def _topo(n, links):
+    """links: (a, b, bw_GBps) triples."""
+    topo = ClusterTopology([DeviceInstance(i, V100) for i in range(n)])
+    for a, b, bw in links:
+        topo.add_link(a, b, Edge(bw * 1e9, 1e-6, "link"))
+    return topo
+
+
+def _random_route(rng):
+    """A Route over 1-5 hops with random per-hop bandwidth/latency,
+    returning (route, per-hop (bw, lat) list)."""
+    hops = rng.randint(1, 5)
+    bws = [rng.uniform(1e9, 400e9) for _ in range(hops)]
+    lats = [rng.uniform(1e-7, 1e-4) for _ in range(hops)]
+    route = Route(path=tuple(range(hops + 1)), bottleneck_bw=min(bws),
+                  latency=sum(lats), resistance=sum(1.0 / b for b in bws))
+    return route, list(zip(bws, lats))
+
+
+# ---------------------------------------------------------------------------
+# Cut-through closed form: the three pricing invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_pipelined_invariants_random_routes(seed):
+    """For any route and size: pipelined <= store-and-forward, == the
+    direct-link price on single hops, >= every hop's own price."""
+    rng = random.Random(seed)
+    fab = FabricModel(alpha=rng.uniform(0.5, 2.0), beta=rng.uniform(0.3, 1.0))
+    for _ in range(40):
+        route, hops = _random_route(rng)
+        size = rng.uniform(1.0, 2e10)
+        pip = fab.route_time(route, size)
+        snf = fab.store_and_forward_time(route, size)
+        assert pip <= snf * (1 + 1e-12)
+        for bw, lat in hops:
+            assert pip >= fab.hop_time(size, bw, lat) * (1 - 1e-12)
+        if route.hops == 1:
+            bw, lat = hops[0]
+            assert pip == pytest.approx(fab.hop_time(size, bw, lat))
+        # un-pipelined mode is exactly the store-and-forward sum
+        snf_mode = FabricModel(alpha=fab.alpha, beta=fab.beta,
+                               pipelining=False)
+        assert snf_mode.route_time(route, size) == pytest.approx(snf)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_closed_form_matches_relay_recursion(seed):
+    """The simulator's per-hop relay recursion lands on route_time's
+    closed form on an uncontended fabric — the identity that makes the
+    analytic cost model and the discrete-event simulator price relayed
+    transfers identically."""
+    rng = random.Random(100 + seed)
+    fab = FabricModel(alpha=rng.uniform(0.5, 2.0), beta=rng.uniform(0.3, 1.0))
+    for _ in range(40):
+        route, hops = _random_route(rng)
+        size = rng.uniform(1.0, 2e10)
+        first_chunk_at = 0.0
+        prev_end = None
+        for bw, lat in hops:
+            # uncontended: every hop starts the moment its first chunk is in
+            prev_end, first_chunk_at = fab.relay_step(
+                size, bw, lat, first_chunk_at, first_chunk_at, prev_end)
+        assert prev_end == pytest.approx(fab.route_time(route, size),
+                                         rel=1e-9)
+
+
+def test_chunking_and_degenerate_sizes():
+    fab = default_fabric()
+    assert fab.chunks(0.0) == 1
+    assert fab.chunks(1.0) == 1
+    assert fab.chunks(fab.chunk_bytes) == 1
+    assert fab.chunks(fab.chunk_bytes + 1) == 2
+    assert fab.chunks(10.5 * fab.chunk_bytes) == 11
+    assert FabricModel(pipelining=False).chunks(1e12) == 1
+    route, _ = _random_route(random.Random(0))
+    zero = Route(path=(3,), bottleneck_bw=math.inf, latency=0.0,
+                 resistance=0.0)
+    assert fab.route_time(zero, 1e9) == 0.0
+    dead = Route(path=(0, 1), bottleneck_bw=0.0, latency=1e-6,
+                 resistance=math.inf)
+    assert fab.route_time(dead, 1e9) == math.inf
+    assert fab.hop_time(1e9, 0.0, 1e-6) == math.inf
+
+
+# ---------------------------------------------------------------------------
+# Cross-path pricing consistency (the regression the refactor exists for)
+# ---------------------------------------------------------------------------
+
+
+def test_all_pricing_paths_agree_on_routed_pair():
+    """costmodel.transfer_time, Route.transfer_time, reconfig's
+    _path_time and the discrete-event relay all price the same routed
+    transfer to the same number."""
+    topo = _topo(4, [(0, 1, 100), (1, 2, 25), (2, 3, 50)])
+    size = 1e9
+
+    analytic = transfer_time(topo, 0, 3, size)
+    route = topo.routing().route(0, 3)
+    via_route = route.transfer_time(size)
+    via_reconfig, bw = ReconfigCostModel._path_time(topo, 0, 3, size)
+
+    g = OpGraph()
+    g.add(OpNode("a", "mm", flops=0.0, out_bytes=size))
+    g.add(OpNode("b", "mm", flops=0.0))
+    g.connect("a", "b")
+    res = simulate_schedule(g, {"a": 0, "b": 3}, topo)
+    via_sim = res.comm_time           # single uncontended transfer
+
+    assert analytic == via_route
+    assert analytic == via_reconfig
+    assert via_sim == pytest.approx(analytic, rel=1e-9)
+    # sustained routed bandwidth is the bottleneck hop's (pipelined)
+    assert bw == pytest.approx(default_fabric().beta * 25e9)
+
+
+def test_all_pricing_paths_agree_on_direct_pair():
+    topo = _topo(2, [(0, 1, 100)])
+    size = 1e9
+    expect = 1e-6 + size / 100e9
+    assert transfer_time(topo, 0, 1, size) == pytest.approx(expect)
+    t, bw = ReconfigCostModel._path_time(topo, 0, 1, size)
+    assert t == pytest.approx(expect)
+    assert bw == pytest.approx(100e9)
+    g = OpGraph()
+    g.add(OpNode("a", "mm", flops=0.0, out_bytes=size))
+    g.add(OpNode("b", "mm", flops=0.0))
+    g.connect("a", "b")
+    res = simulate_schedule(g, {"a": 0, "b": 1}, topo)
+    assert res.comm_time == pytest.approx(expect, rel=1e-9)
+
+
+def test_transfer_dispatch_corner_cases():
+    topo = _topo(4, [(0, 1, 100), (2, 3, 100)])      # two islands
+    fab = default_fabric()
+    assert fab.transfer_time(topo, 1, 1, 1e9) == 0.0
+    assert fab.transfer_time(topo, 0, 2, 1e9) == math.inf
+    assert fab.path_time(topo, 0, 2, 1e9) == (math.inf, 0.0)
+    # explicit edge overrides dispatch entirely
+    e = Edge(10e9, 5e-6, "x")
+    assert fab.transfer_time(topo, 0, 3, 1e9, edge=e) == \
+        pytest.approx(5e-6 + 1e9 / 10e9)
+
+
+# ---------------------------------------------------------------------------
+# Ring capacity (collective pricing)
+# ---------------------------------------------------------------------------
+
+
+def test_ring_capacity_complete_graph_matches_direct_links():
+    """On a complete graph the fabric's ring pricing is the plain
+    slowest-direct-link rule — identical with and without pipelining."""
+    topo = _topo(3, [(0, 1, 100), (1, 2, 100), (0, 2, 100)])
+    bw, lat = _bottleneck_bw(topo, [0, 1, 2])
+    assert bw == pytest.approx(100e9)
+    assert lat == pytest.approx(1e-6)
+    with use_fabric(FabricModel(pipelining=False)):
+        assert _bottleneck_bw(topo, [0, 1, 2]) == (bw, lat)
+
+
+def test_ring_capacity_routed_pair_streams_at_bottleneck():
+    """A chain ring's wrap pair relays, but its directed hops are unshared
+    (full duplex), so pipelining sustains the full link rate; the
+    store-and-forward mode halves it (resistance sum)."""
+    topo = _topo(3, [(0, 1, 100), (1, 2, 100)])
+    bw, lat = _bottleneck_bw(topo, [0, 1, 2])
+    assert bw == pytest.approx(100e9)
+    assert lat == pytest.approx(2e-6)     # the 2-hop wrap path dominates
+    with use_fabric(FabricModel(pipelining=False)):
+        snf_bw, snf_lat = _bottleneck_bw(topo, [0, 1, 2])
+    assert snf_bw == pytest.approx(50e9)
+    assert snf_lat == pytest.approx(2e-6)
+
+
+def test_ring_capacity_divides_shared_directed_links():
+    """Ring order [0, 2, 1, 3] on a 4-chain makes two pair-routes cross
+    the same directed link — the sustained rate halves."""
+    topo = _topo(4, [(0, 1, 100), (1, 2, 100), (2, 3, 100)])
+    bw, _ = _bottleneck_bw(topo, [0, 2, 1, 3])
+    assert bw == pytest.approx(50e9)
+    # the natural ring order shares nothing and keeps the full rate
+    nat, _ = _bottleneck_bw(topo, [0, 1, 2, 3])
+    assert nat == pytest.approx(100e9)
+
+
+def test_ring_capacity_partition_and_small_rings():
+    fab = default_fabric()
+    topo = _topo(4, [(0, 1, 100), (2, 3, 100)])
+    assert fab.ring_capacity(topo, [0, 1, 2]) == (0.0, 0.0)
+    assert fab.ring_capacity(topo, [0]) == (math.inf, 0.0)
+    assert allreduce_time(topo, 1e9, [0, 2]) == math.inf
+
+
+# ---------------------------------------------------------------------------
+# Default-fabric plumbing (scoped override, calibration)
+# ---------------------------------------------------------------------------
+
+
+def test_use_fabric_scopes_and_restores():
+    base = default_fabric()
+    custom = FabricModel(alpha=2.0, beta=0.5)
+    with use_fabric(custom) as f:
+        assert f is custom
+        assert default_fabric() is custom
+    assert default_fabric() is base
+    with pytest.raises(RuntimeError):
+        with use_fabric(custom):
+            raise RuntimeError("boom")
+    assert default_fabric() is base
+
+
+def test_set_default_fabric_returns_previous():
+    base = default_fabric()
+    try:
+        prev = set_default_fabric(FabricModel(beta=0.7))
+        assert prev is base
+        assert default_fabric().beta == 0.7
+    finally:
+        set_default_fabric(base)
+
+
+def test_calibrated_builds_on_current_default():
+    fab = calibrated(1.5, 0.8)
+    assert (fab.alpha, fab.beta) == (1.5, 0.8)
+    assert fab.chunk_bytes == default_fabric().chunk_bytes
+    base = FabricModel(chunk_bytes=4096.0, pipelining=False)
+    fab2 = calibrated(2.0, 0.9, base=base)
+    assert fab2.chunk_bytes == 4096.0 and not fab2.pipelining
+
+
+def test_calibration_scales_prices():
+    """alpha scales the latency term, beta divides the bandwidth term —
+    end to end through the public transfer_time."""
+    topo = _topo(3, [(0, 1, 100), (1, 2, 100)])
+    size = 1e9
+    base = transfer_time(topo, 0, 2, size)
+    with use_fabric(calibrated(2.0, 0.5)):
+        scaled = transfer_time(topo, 0, 2, size)
+    route = topo.routing().route(0, 2)
+    fab = calibrated(2.0, 0.5)
+    assert scaled == pytest.approx(fab.route_time(route, size))
+    assert scaled > base
+
+
+# ---------------------------------------------------------------------------
+# Mid-flight re-routing in simulate_epoch
+# ---------------------------------------------------------------------------
+
+
+def test_midstep_event_splits_and_reprices_the_step():
+    """A bandwidth collapse landing inside a step re-prices the remaining
+    work fraction immediately; boundary-only mode charges the whole step
+    at the pre-event rate."""
+    topo = _topo(2, [(0, 1, 100)])
+    topo_probe = topo.copy()
+    plan = megatron_default_plan(topo_probe, DESC, microbatches=4)
+    s0 = simulate_training_step(plan, DESC, topo_probe, global_batch=64,
+                                seq=1024).step_time
+    tau = 0.4 * s0
+    topo.events = [NetworkEvent(tau, "bandwidth", factor=0.1)]
+    s1 = simulate_training_step(plan, DESC, topo, global_batch=64,
+                                seq=1024, at_time=tau + 1e-9).step_time
+    assert s1 > s0
+
+    obs = Obs()
+    on = simulate_epoch(plan, DESC, topo, global_batch=64, seq=1024,
+                        steps=1, obs=obs)
+    off = simulate_epoch(plan, DESC, topo, global_batch=64, seq=1024,
+                         steps=1, reroute_in_flight=False)
+    # boundary-only: the event is invisible to the single step
+    assert off.step_times[0] == pytest.approx(s0)
+    # mid-flight: 40% of the work at the old rate, 60% at the degraded one
+    assert on.step_times[0] == pytest.approx(tau + 0.6 * s1, rel=1e-9)
+    assert on.total_time > off.total_time
+    assert obs.metrics.counter_value("sim.reroute.events") == 1
+    assert obs.metrics.counter_value("sim.reroute.steps") == 1
+
+
+def test_midstep_recovery_speeds_up_the_remainder():
+    """Re-routing is symmetric: a recovered link speeds the in-flight
+    step up, so mid-flight pricing comes in *under* boundary-only."""
+    topo = _topo(2, [(0, 1, 100)])
+    plan = megatron_default_plan(topo.copy(), DESC, microbatches=4)
+    degraded = topo.copy()
+    degraded.apply_event(NetworkEvent(0.0, "bandwidth", factor=0.1))
+    s_slow = simulate_training_step(plan, DESC, degraded, global_batch=64,
+                                    seq=1024).step_time
+    tau = 0.3 * s_slow
+    topo.events = [NetworkEvent(0.0, "bandwidth", factor=0.1),
+                   NetworkEvent(tau, "bandwidth", factor=1.0)]
+    on = simulate_epoch(plan, DESC, topo, global_batch=64, seq=1024, steps=1)
+    off = simulate_epoch(plan, DESC, topo, global_batch=64, seq=1024,
+                         steps=1, reroute_in_flight=False)
+    assert on.total_time < off.total_time
+    assert off.step_times[0] == pytest.approx(s_slow)
+
+
+def test_midstep_event_still_triggers_replan_at_next_boundary():
+    """An event consumed mid-step must not be lost to the replan hook: the
+    next boundary still sees it."""
+    topo = _topo(2, [(0, 1, 100)])
+    plan = megatron_default_plan(topo.copy(), DESC, microbatches=4)
+    s0 = simulate_training_step(plan, DESC, topo, global_batch=64,
+                                seq=1024).step_time
+    topo.events = [NetworkEvent(0.5 * s0, "bandwidth", factor=0.5)]
+    seen = []
+    sim = simulate_epoch(plan, DESC, topo, global_batch=64, seq=1024,
+                         steps=3, replan_fn=lambda t, at: seen.append(at)
+                         or plan)
+    assert sim.replans == 1
+    assert seen and seen[0] >= 0.5 * s0
+
+
+def test_reroute_changes_catalog_trace_outcome():
+    """Acceptance: mid-flight re-routing changes a catalog-trace outcome.
+    diurnal_wan_crossover's 40 s WAN trough lands inside a step at this
+    replay scale; the split step re-prices its remainder on the trough
+    bandwidth and the epoch total moves (deterministic seed)."""
+    topo, trace = build("diurnal_wan_crossover", seed=0)
+    plan = megatron_default_plan(topo.copy(), DESC, microbatches=4)
+    obs = Obs()
+    on = simulate_epoch(plan, DESC, topo, global_batch=512, seq=2048,
+                        steps=8, obs=obs)
+    off = simulate_epoch(plan, DESC, topo, global_batch=512, seq=2048,
+                         steps=8, reroute_in_flight=False)
+    assert on.total_time != off.total_time
+    assert obs.metrics.counter_value("sim.reroute.events") >= 1
+    assert obs.metrics.counter_value("sim.reroute.steps") >= 1
+    # determinism: same trace, same outcome
+    again = simulate_epoch(plan, DESC, topo, global_batch=512, seq=2048,
+                           steps=8)
+    assert again.total_time == on.total_time
+    assert again.step_times == on.step_times
+
+
+# ---------------------------------------------------------------------------
+# Simulator fabric counters
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_schedule_records_fabric_counters():
+    topo = _topo(3, [(0, 1, 100), (1, 2, 100)])
+    g = OpGraph()
+    g.add(OpNode("a", "mm", flops=0.0, out_bytes=4 * float(1 << 20)))
+    g.add(OpNode("b", "mm", flops=0.0))
+    g.connect("a", "b")
+    obs = Obs()
+    simulate_schedule(g, {"a": 0, "b": 2}, topo, obs=obs)
+    assert obs.metrics.counter_value("fabric.relays") == 1
+    assert obs.metrics.counter_value("fabric.relay_hops") == 2
+    assert obs.metrics.counter_value("fabric.chunks") == 4

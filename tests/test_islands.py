@@ -220,8 +220,10 @@ def test_max_sims_budget_bounds_simulations():
     assert math.isfinite(res.predicted.step_time)
 
 
-def test_plan_hybrid_n_workers_deprecated():
+def test_plan_hybrid_n_workers_shim_removed():
+    # the n_workers= compatibility shim (DeprecationWarning since PR 6)
+    # is gone; callers must pass executor=
     topo = homogeneous_cluster(4, "V100")
-    with pytest.warns(DeprecationWarning, match="executor"):
+    with pytest.raises(TypeError, match="n_workers"):
         plan_hybrid(topo, DESC, global_batch=16, seq=512,
                     with_baseline=False, n_workers=2)

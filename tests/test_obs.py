@@ -186,6 +186,19 @@ def test_trace_report_renders_phases_and_counters():
     assert hybrid["total_s"] >= hybrid["self_s"] >= 0.0
 
 
+def test_trace_report_renders_fabric_fidelity_line():
+    obs, _ = _traced_plan()
+    obs.inc("fabric.relays", 2)
+    obs.inc("fabric.relay_hops", 5)
+    obs.inc("fabric.chunks", 12)
+    obs.inc("sim.reroute.events", 3)
+    obs.inc("sim.reroute.steps", 2)
+    out = render(chrome_trace(obs))
+    assert "fabric fidelity" in out
+    assert "2 relayed transfer(s), 2.5 hops avg, 12 chunk(s)" in out
+    assert "3 mid-flight reroute event(s) across 2 split step(s)" in out
+
+
 # ---------------------------------------------------------------------------
 # Instrumentation: counters agree with SearchStats (the drift invariant)
 # ---------------------------------------------------------------------------

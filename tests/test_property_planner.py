@@ -107,6 +107,53 @@ def test_layer_split_partitions_exactly(n_stages_raw, n_layers, speeds):
                 assert bottleneck(cand) >= base - 1e-9
 
 
+@st.composite
+def sparse_routed_topology(draw):
+    """A random sparse (but connected) cluster plus a pair forced to
+    relay: a spanning chain with extra random chords, where the probe
+    pair's direct link is never added."""
+    n = draw(st.integers(3, 7))
+    spec = DeviceSpec("d", 1e14, 1e12, 64e9)
+    topo = ClusterTopology([DeviceInstance(i, spec) for i in range(n)])
+    for i in range(n - 1):
+        topo.add_link(i, i + 1, Edge(draw(st.floats(1e9, 4e11)),
+                                     draw(st.floats(1e-7, 1e-4)), "l"))
+    for a in range(n):
+        for b in range(a + 2, n):
+            if (a, b) != (0, n - 1) and draw(st.booleans()):
+                topo.add_link(a, b, Edge(draw(st.floats(1e9, 4e11)),
+                                         draw(st.floats(1e-7, 1e-4)), "l"))
+    size = draw(st.floats(1.0, 2e10))
+    return topo, (0, n - 1), size
+
+
+@settings(max_examples=40, deadline=None)
+@given(sparse_routed_topology())
+def test_fabric_pipelined_invariants_on_random_sparse_graphs(ts):
+    """ISSUE 8 satellite: over randomized sparse graphs the pipelined
+    routed price is <= store-and-forward, == the direct-link price on
+    single-hop routes, and >= the slowest hop's own price."""
+    from repro.core import FabricModel, default_fabric, use_fabric
+    from repro.core.costmodel import transfer_time
+
+    topo, (a, b), size = ts
+    route = topo.routing().route(a, b)
+    assert route is not None
+    fab = default_fabric()
+    pip = transfer_time(topo, a, b, size)
+    assert math.isfinite(pip)
+    assert pip == fab.route_time(route, size)
+    with use_fabric(FabricModel(pipelining=False)):
+        snf = transfer_time(topo, a, b, size)
+    assert pip <= snf * (1 + 1e-12)
+    for u, v in zip(route.path, route.path[1:]):
+        hop = transfer_time(topo, u, v, size)
+        assert pip >= hop * (1 - 1e-12)
+    # direct pairs price as their best physical edge (single-hop identity)
+    assert transfer_time(topo, 0, 1, size) == pytest.approx(
+        fab.edge_time(topo.link(0, 1).best_edge(size), size))
+
+
 @settings(max_examples=15, deadline=None)
 @given(st.floats(0.05, 1.0))
 def test_slowdown_never_speeds_up_schedule(factor):

@@ -163,7 +163,7 @@ def test_plan_sequence_dp_routes_around_infeasibility():
 @pytest.mark.parametrize("name", list_scenarios())
 def test_dp_oracle_never_worse_than_greedy_on_catalog(name):
     h = ScenarioHarness(TINY, global_batch=32, seq=512,
-                        max_candidates=16, n_workers=2)
+                        max_candidates=16)
     rep = h.run(name, seed=0)
     assert rep.oracle is not None and rep.oracle_dp is not None
     assert rep.oracle_dp.avg_step <= rep.oracle.avg_step * (1 + 1e-9), \

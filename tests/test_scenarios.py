@@ -112,7 +112,7 @@ def test_congestion_bursts_are_scale_mode_and_restore():
 
 def _harness():
     return ScenarioHarness(TINY, global_batch=32, seq=512,
-                           max_candidates=24, n_workers=2)
+                           max_candidates=24)
 
 
 def test_harness_replay_and_replay_determinism():

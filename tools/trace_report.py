@@ -127,6 +127,18 @@ def render(doc: dict) -> str:
             rate = hit / (hit + miss) if (hit + miss) else 0.0
             lines.append(f"{'cache hit rate':<28} {rate:7.1%}  "
                          f"({hit} hits / {miss} misses)")
+        # fabric fidelity (ISSUE 8): how much relayed / re-routed traffic
+        # the simulated run actually exercised
+        relays = counters.get("fabric.relays", 0)
+        rr_ev = counters.get("sim.reroute.events", 0)
+        if relays or rr_ev:
+            hops = counters.get("fabric.relay_hops", 0)
+            lines.append(
+                f"{'fabric fidelity':<28} {relays} relayed transfer(s), "
+                f"{hops / relays if relays else 0.0:.1f} hops avg, "
+                f"{counters.get('fabric.chunks', 0)} chunk(s); "
+                f"{rr_ev} mid-flight reroute event(s) across "
+                f"{counters.get('sim.reroute.steps', 0)} split step(s)")
         for name in sorted(counters):
             lines.append(f"{name:<28} {counters[name]:>10}")
     if not lines:
