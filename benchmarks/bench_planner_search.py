@@ -41,6 +41,18 @@ catalog trace through ``simulate_epoch``.  ``benchmarks.compare`` gates
 the pipelined<=S&F boolean, the pipelined/S&F delta and the exact reroute
 counts against the committed baseline.
 
+**LP tier + MIP certification (ISSUE 9)**: every flat row re-runs the
+serial cascade with the tier-2.5 LP-relaxation bound disabled
+(``lp_prune=False``) and gates byte-identity of the argmin — the LP tier is
+admissible, so it may only change how many candidates reach the simulator
+(``pruned_lp`` / ``lp_wall_s`` columns; the dense-hetero rows gate a
+ratio-min on ``pruned_lp`` via ``benchmarks.compare`` and the ISSUE 9
+acceptance floor ``prune_rate >= 0.40`` here).  Each flat row also runs the
+exact branch-and-bound oracle (``repro.core.mip.mip_optimum``) under a wall
+budget: wherever the oracle completes, the cascade argmin must equal the
+certified optimum byte-for-byte (``mip_certified``; budget exhaustion
+skips, never fails).
+
 The hetero/16 row additionally measures **tracing overhead** (ISSUE 7):
 the serial cascade runs again untraced and twice traced into a live
 :class:`repro.obs.Obs` bundle; ``trace_overhead`` is the min-of-2 traced
@@ -70,9 +82,9 @@ import os
 import time
 
 from repro.core import (FabricModel, SearchExecutor, enumerate_strategies,
-                        hetero_cluster, megatron_default_plan, multi_pod_tpu,
-                        plan_hierarchical, plan_hybrid, simulate_epoch,
-                        simulate_training_step, use_fabric)
+                        hetero_cluster, megatron_default_plan, mip_optimum,
+                        multi_pod_tpu, plan_hierarchical, plan_hybrid,
+                        simulate_epoch, simulate_training_step, use_fabric)
 from repro.obs import Obs, write_metrics, write_trace
 from benchmarks.common import (PAPER_MODELS, calibrate_process_ceiling, emit,
                                write_json)
@@ -172,9 +184,24 @@ def run(quick: bool = False, json_path: str | None = None,
             t0 = time.perf_counter()
             ser = plan_hybrid(topo, desc, **kw)
             t_ser = time.perf_counter() - t0
+            # ISSUE 9: the same cascade with the LP tier off — admissibility
+            # means the argmin is byte-identical, only the simulated count
+            # (and wall) moves
+            t0 = time.perf_counter()
+            nolp = plan_hybrid(topo, desc, lp_prune=False, **kw)
+            t_nolp = time.perf_counter() - t0
             t0 = time.perf_counter()
             par = plan_hybrid(topo, desc, executor=executor, **kw)
             t_par = time.perf_counter() - t0
+            # exact-MIP certification oracle: budgeted at the exhaustive
+            # wall (the oracle's LP bounds make it far cheaper in practice);
+            # an exhausted budget skips certification, never fails it
+            mip = mip_optimum(topo, desc, global_batch=4 * n, seq=2048,
+                              max_candidates=128,
+                              wall_budget_s=max(30.0, 2.0 * t_exh))
+            mip_certified = (not mip.completed) or (
+                mip.step_time == ser.predicted.step_time
+                and mip.plan.to_json() == ser.plan.to_json())
             # hierarchical entry point at its default flat_limit: these
             # sizes must take the flat-fallback path and reproduce the
             # serial cascade's plan exactly
@@ -207,8 +234,14 @@ def run(quick: bool = False, json_path: str | None = None,
                 "gpus": n, "candidates": len(pts),
                 "argmin_matches_exhaustive":
                     ser.plan.to_json() == exh.plan.to_json(),
+                "argmin_matches_nolp":
+                    ser.plan.to_json() == nolp.plan.to_json()
+                    and ser.predicted.step_time == nolp.predicted.step_time,
                 "parallel_matches_serial":
                     par.plan.to_json() == ser.plan.to_json(),
+                "mip_certified": mip_certified,
+                "mip_completed": mip.completed,
+                "mip_wall_s": round(mip.wall_s, 2),
                 "hierarchical_matches_flat":
                     hier.path == "flat" and hier.flat is not None
                     and hier.flat.plan.to_json() == ser.plan.to_json(),
@@ -217,11 +250,14 @@ def run(quick: bool = False, json_path: str | None = None,
                 "pruned_feasibility": st.pruned_feasibility,
                 "pruned_bound": st.pruned_bound,
                 "pruned_coarse": st.pruned_coarse,
+                "pruned_lp": st.pruned_lp,
+                "lp_wall_s": round(st.lp_wall_time, 4),
                 "simulated": st.simulated,
                 "rejected": st.rejected,
                 "prune_rate": round(st.prune_rate, 3),
                 "search_exhaustive_s": round(t_exh, 2),
                 "search_serial_s": round(t_ser, 2),
+                "search_serial_nolp_s": round(t_nolp, 2),
                 "search_parallel_s": round(t_par, 2),
                 "hier_wall_s": round(t_hier, 2),
                 "parallel_speedup": round(speedup, 2),
@@ -281,12 +317,24 @@ def run(quick: bool = False, json_path: str | None = None,
     for r in flat_rows:
         assert r["argmin_matches_exhaustive"], \
             ("cascade pruned the true argmin", r)
+        assert r["argmin_matches_nolp"], \
+            ("LP tier changed the argmin — the bound is not admissible", r)
         assert r["parallel_matches_serial"], \
             ("process-parallel search diverged from serial", r)
         assert r["hierarchical_matches_flat"], \
             ("hierarchical fallback diverged from the flat cascade", r)
         assert r["prune_rate"] > 0.0, \
             ("cascade pruned nothing before full simulation", r)
+        assert r["mip_certified"], \
+            ("cascade argmin != completed MIP-oracle optimum", r)
+    # ISSUE 9 acceptance: on the dense-hetero rows the LP tier must cut
+    # candidates and lift the end-to-end prune rate past 40%
+    for r in flat_rows:
+        if r["topology"] == "hetero":
+            assert r["pruned_lp"] > 0, \
+                ("LP tier pruned nothing on a dense-hetero row", r)
+            assert r["prune_rate"] >= 0.40, \
+                ("dense-hetero prune rate below the ISSUE 9 floor", r)
     # ISSUE 5 acceptance: the coarse tier's ring/connectivity caps are
     # active on the sparse TPU-torus link graph (routed transfer pricing
     # makes them sound there) and actually cut candidates

@@ -173,6 +173,14 @@ SPECS: dict[str, BenchSpec] = {
             # or tier drift without demanding bit-equality across refactors
             Gate("prune_rate", "ratio-min", tol=0.10),
             Gate("pruned_coarse", "ratio-min", tol=0.50),
+            # LP-relaxation tier + exact-MIP oracle (ISSUE 9): toggling the
+            # admissible LP bound must never move the argmin, a completed
+            # oracle run must certify the cascade argmin, and the LP tier's
+            # cut count on the committed (dense-hetero) baseline rows must
+            # not silently collapse
+            Gate("argmin_matches_nolp", "bool-true"),
+            Gate("mip_certified", "bool-true"),
+            Gate("pruned_lp", "ratio-min", tol=0.25),
             # hierarchical island tier (ISSUE 6): on every flat-tractable
             # row the hierarchical entry point must fall back to the flat
             # cascade and return the identical plan byte-for-byte

@@ -31,6 +31,8 @@ from .reconfig import ReconfigCost, ReconfigCostModel, plan_sequence_dp
 from .routing import Route, RoutingTable
 from .plans import (ParallelPlan, StageAssignment, megatron_default_plan,
                     split_devices, stages_from_sizes, uniform_stages)
+from .mip import (LPBoundContext, MIPResult, SimplexResult, lp_bound_context,
+                  lp_lower_bound, mip_optimum, simplex_solve)
 from .search import (CandidateOutcome, SearchExecutor, coarse_lower_bound,
                      materialize_variant, point_feasible, score_candidates)
 from .simulator import (EpochSim, SimResult, StepSim, check_memory,

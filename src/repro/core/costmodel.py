@@ -132,6 +132,29 @@ def collective_time(topo: ClusterTopology, comm: CommOp) -> float:
     raise ValueError(f"unknown collective kind {comm.kind}")
 
 
+def collective_floor(kind: str, size: float, n: int, bw: float) -> float:
+    """Latency-free linear floor of :func:`collective_time` over an
+    ``n``-member ring at bottleneck bandwidth ``bw`` — the shared pricing
+    primitive of the admissible search bounds (the coarse and LP tiers in
+    :mod:`repro.core.search` / :mod:`repro.core.mip`), kept here so bound
+    and simulator collective models cannot drift apart.  ``rs_ag`` is the
+    decomposed reduce-scatter + all-gather pair; ``reduce_broadcast`` the
+    naive root-funnel pair (Fig. 3)."""
+    if n <= 1 or size <= 0:
+        return 0.0
+    if bw <= 0:
+        return math.inf
+    if kind in ("reduce_scatter", "all_gather", "all_to_all"):
+        return (n - 1) / n * size / bw
+    if kind in ("all_reduce", "rs_ag"):
+        return 2.0 * (n - 1) / n * size / bw
+    if kind in ("reduce", "broadcast"):
+        return (n - 1) * size / bw
+    if kind == "reduce_broadcast":
+        return 2.0 * (n - 1) * size / bw
+    raise ValueError(f"unknown collective kind {kind}")
+
+
 def allreduce_time(topo: ClusterTopology, size: float, ranks: Sequence[int],
                    *, decomposed: bool = True) -> float:
     """Fig. 3 comparison entry point."""

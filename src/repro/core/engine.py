@@ -340,10 +340,14 @@ class ReplanEngine:
                  switch_horizon_s: float | None = None,
                  straggler_escalate_gap: float = 1.15,
                  executor=None, plan_top_k: int = 1,
+                 lp_prune: bool = True,
                  obs: Obs | None = None):
         self.model = model
         self.global_batch = global_batch
         self.seq = seq
+        # tier-2.5 LP bound toggle, forwarded to every plan_hybrid this
+        # engine issues (admissible — never changes the chosen plan)
+        self.lp_prune = lp_prune
         # telemetry bundle: every replan records a ``replan.<path>`` span,
         # a ``replan.path.<path>`` counter and a ``replan.latency_s``
         # observation into it (no-op unless tracing is on)
@@ -542,7 +546,8 @@ class ReplanEngine:
                           with_baseline=False,
                           max_candidates=self.max_candidates,
                           cache=self.cache, executor=self.executor,
-                          top_k=self.plan_top_k, obs=self.obs)
+                          top_k=self.plan_top_k, lp_prune=self.lp_prune,
+                          obs=self.obs)
         stats = res.search_stats or SearchStats()
         return self._finish(res.plan, res.predicted, "cold-plan", t0, stats,
                             cold=True, topo=topo, ctx=ctx,
@@ -741,7 +746,7 @@ class ReplanEngine:
                         max_candidates=self.max_candidates, cache=self.cache,
                         points=neigh, allow_subset=False,
                         incumbent_bound=best[0], executor=self.executor,
-                        obs=self.obs)
+                        lp_prune=self.lp_prune, obs=self.obs)
                     ns = res.search_stats or SearchStats()
                     stats.explored += ns.explored
                     stats.pruned += ns.pruned
@@ -811,7 +816,8 @@ class ReplanEngine:
                     with_baseline=False,
                     max_candidates=self.max_candidates, cache=self.cache,
                     points=neigh, allow_subset=False,
-                    executor=self.executor, obs=self.obs)
+                    executor=self.executor, lp_prune=self.lp_prune,
+                    obs=self.obs)
                 stats = res.search_stats or SearchStats()
                 return self._finish(res.plan, res.predicted, "neighborhood",
                                     t0, stats, cold=False, topo=topo,
@@ -837,7 +843,8 @@ class ReplanEngine:
                           with_baseline=False,
                           max_candidates=self.max_candidates,
                           cache=self.cache, incumbent_bound=bound,
-                          executor=self.executor, obs=self.obs)
+                          executor=self.executor, lp_prune=self.lp_prune,
+                          obs=self.obs)
         stats = res.search_stats or SearchStats()
         best_plan, best_sim = res.plan, res.predicted
         if inc_sim is not None and inc_sim.step_time < best_sim.step_time:
@@ -929,9 +936,11 @@ class HierarchicalReplanEngine:
                  gpus_per_node: int = 8,
                  max_candidates: int | None = None,
                  max_sims: int | None = None,
+                 lp_prune: bool = True,
                  obs: Obs | None = None):
         from .islands import DEFAULT_FLAT_LIMIT
         self.model = model
+        self.lp_prune = lp_prune
         self.global_batch = global_batch
         self.seq = seq
         self.obs = resolve_obs(obs)
@@ -960,7 +969,8 @@ class HierarchicalReplanEngine:
                 self.model, global_batch=self.global_batch, seq=self.seq,
                 cache=self.cache, executor=self.executor,
                 max_candidates=self.max_candidates,
-                gpus_per_node=self.gpus_per_node, obs=self.obs)
+                gpus_per_node=self.gpus_per_node, lp_prune=self.lp_prune,
+                obs=self.obs)
         return self._flat
 
     def _wrap_flat(self, inner: ReplanResult) -> HierarchicalReplanResult:
@@ -989,7 +999,8 @@ class HierarchicalReplanEngine:
             flat_limit=self.flat_limit, fast_frac=self.fast_frac,
             gpus_per_node=self.gpus_per_node,
             max_candidates=self.max_candidates, max_sims=self.max_sims,
-            cache=self.cache, executor=self.executor, obs=self.obs)
+            cache=self.cache, executor=self.executor,
+            lp_prune=self.lp_prune, obs=self.obs)
         assert hres.composed is not None
         self._plans = {ip.island.device_ids: ip
                        for ip in hres.composed.islands}
@@ -1017,7 +1028,8 @@ class HierarchicalReplanEngine:
                 self.model, global_batch=ip.batch, seq=self.seq,
                 cache=self.cache, executor=self.executor,
                 max_candidates=self.max_candidates,
-                gpus_per_node=self.gpus_per_node, obs=self.obs)
+                gpus_per_node=self.gpus_per_node, lp_prune=self.lp_prune,
+                obs=self.obs)
             eng.incumbent = (ip.plan, ip.predicted)
             eng._device_key = self.cache.fingerprint(
                 topo.subtopology(key)).device_key

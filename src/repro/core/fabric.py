@@ -118,6 +118,17 @@ class FabricModel:
             return math.inf
         return self.alpha * latency + size / (self.beta * bw)
 
+    def linear_bw(self, bw: float) -> float:
+        """Linearized pricing hook for the admissible search bounds (the
+        coarse and LP tiers): the highest sustained rate this fabric can
+        deliver over a link of nominal bandwidth ``bw`` — the latency-free,
+        chunking-free limit of :meth:`hop_time`.  Clamped at the nominal
+        rate so a (non-physical) ``beta > 1`` calibration cannot lift a
+        lower bound above the raw-bandwidth caps the admissibility
+        arguments are stated for; under the calibrated ``beta <= 1`` this
+        *tightens* the bounds to match the scaled simulator."""
+        return bw * min(1.0, self.beta)
+
     def edge_time(self, edge: "Edge", size: float) -> float:
         """Price ``size`` bytes on one physical edge (calibrated)."""
         return self.hop_time(size, edge.effective_bandwidth, edge.latency)

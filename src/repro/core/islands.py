@@ -316,6 +316,7 @@ def plan_hierarchical(topo: ClusterTopology, model: ModelDesc, *,
                       max_sims: int | None = None,
                       cache=None, executor=None,
                       top_k: int = 1,
+                      lp_prune: bool = True,
                       obs: Obs | None = None) -> HierarchicalResult:
     """Plan a (possibly fleet-scale) cluster via hierarchical island search.
 
@@ -337,8 +338,11 @@ def plan_hierarchical(topo: ClusterTopology, model: ModelDesc, *,
             runs instead (``0`` forces hierarchical whenever K > 1).
         fast_frac: island partition threshold (see
             :meth:`ClusterTopology.island_partition`).
-        gpus_per_node / max_candidates / cache / executor / top_k:
-            forwarded to every ``plan_hybrid`` call (flat and per-island).
+        gpus_per_node / max_candidates / cache / executor / top_k /
+        lp_prune:
+            forwarded to every ``plan_hybrid`` call (flat and per-island) —
+            ``lp_prune`` toggles the tier-2.5 LP bound in each sub-search's
+            cascade.
         max_sims: per-sub-search anytime simulation budget (forwarded to
             the cascade; see ``score_candidates``).  Essential at fleet
             scale — an island sub-search then stops after the budget's
@@ -367,7 +371,7 @@ def plan_hierarchical(topo: ClusterTopology, model: ModelDesc, *,
                           gpus_per_node=gpus_per_node, with_baseline=False,
                           max_candidates=max_candidates, cache=cache,
                           executor=executor, top_k=top_k, max_sims=max_sims,
-                          obs=obs)
+                          lp_prune=lp_prune, obs=obs)
         stats = res.search_stats or SearchStats()
         wall = time.perf_counter() - t0
         return HierarchicalResult(
@@ -415,7 +419,7 @@ def plan_hierarchical(topo: ClusterTopology, model: ModelDesc, *,
                         gpus_per_node=gpus_per_node, with_baseline=False,
                         max_candidates=max_candidates, allow_subset=False,
                         cache=cache, executor=executor, max_sims=max_sims,
-                        obs=obs)
+                        lp_prune=lp_prune, obs=obs)
                 except RuntimeError:
                     isl_span.set(feasible=False)
                     infeasible.update(m.index for m in members)

@@ -78,6 +78,8 @@ class SearchStats:
     pruned_bound: int = 0
     # ...by the coarse pipeline/sync estimate tier,
     pruned_coarse: int = 0
+    # ...by the LP-relaxation packing bound (repro.core.mip, tier 2.5),
+    pruned_lp: int = 0
     # ...and candidates that reached the final tier and were fully scored —
     # by a fresh simulation OR a session-cache hit (the cascade's pruning
     # denominator; ``cache_hits``/``cache_misses`` tell warm resolution
@@ -87,19 +89,24 @@ class SearchStats:
     # pruned (one of them might have been the argmin); nonzero only when a
     # caller bounds the final tier (the hierarchical island searches do)
     budget_skipped: int = 0
+    # wall seconds spent inside the LP tier (context build + simplex
+    # solves + per-candidate bound assembly) — the cost the guard weighs
+    # against projected simulation savings
+    lp_wall_time: float = 0.0
 
     @property
     def cascade_candidates(self) -> int:
         """Candidates that entered the cascade (all tiers' denominator)."""
         return (self.pruned_feasibility + self.pruned_bound
-                + self.pruned_coarse + self.simulated + self.rejected
-                + self.budget_skipped)
+                + self.pruned_coarse + self.pruned_lp + self.simulated
+                + self.rejected + self.budget_skipped)
 
     @property
     def prune_rate(self) -> float:
         """Fraction of cascade candidates cut before full simulation."""
         total = self.cascade_candidates
-        cut = self.pruned_feasibility + self.pruned_bound + self.pruned_coarse
+        cut = (self.pruned_feasibility + self.pruned_bound
+               + self.pruned_coarse + self.pruned_lp)
         return cut / total if total else 0.0
 
 
@@ -614,6 +621,7 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
                 points: Sequence[StrategyPoint] | None = None,
                 executor=None, top_k: int = 1,
                 prune: bool = True,
+                lp_prune: bool = True,
                 max_sims: int | None = None,
                 obs: Obs | None = None) -> PlanResult:
     """End-to-end planning: resolve the candidate set (cache / enumeration /
@@ -654,8 +662,13 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
         top_k: how many distinct best plans to report in
             :attr:`PlanResult.top_plans`; the cascade keeps pruning sound
             for the full top-``k`` set, not just the argmin.
-        prune: ``False`` disables tiers 0-2 and exhaustively simulates
-            every candidate (the soundness reference for tests/benchmarks).
+        prune: ``False`` disables every pre-simulation tier and
+            exhaustively simulates every candidate (the soundness
+            reference for tests/benchmarks).
+        lp_prune: ``False`` disables only the tier-2.5 LP-relaxation bound
+            (:mod:`repro.core.mip`).  The tier is admissible, so toggling
+            it never changes the chosen plan — only how many candidates
+            reach the simulator.
         max_sims: anytime budget on fully scored candidates (best-bound
             first; see ``score_candidates``).  NOT sound — the argmin
             identity is waived when it binds.  Used by the hierarchical
@@ -731,8 +744,8 @@ def plan_hybrid(topo: ClusterTopology, model: ModelDesc, *,
     scored = search_mod.score_candidates(
         topo, model, global_batch=global_batch, seq=seq, points=points,
         ctx=ctx, incumbent_bound=incumbent_bound, keep_top_k=max(1, top_k),
-        executor=executor, prune=prune, stats=stats, max_sims=max_sims,
-        obs=obs)
+        executor=executor, prune=prune, lp_prune=lp_prune, stats=stats,
+        max_sims=max_sims, obs=obs)
     if not scored:
         plan_span.__exit__(None, None, None)
         raise RuntimeError("no feasible plan found")

@@ -12,6 +12,14 @@ Tier 1  ``point_lower_bound``   analytic optimistic step time (compute over
 Tier 2  ``coarse_lower_bound``  tighter closed-form estimate adding the
                                 pipeline-chain / bottleneck-stage and TP
                                 collective floors — still admissible.
+Tier 2.5 ``lp`` (repro.core.mip) class-capacity packing LP: fractional
+                                layer->TP-group assignment with per-class
+                                slot capacities, fabric-priced collective
+                                floors and microbatch occupancy rows —
+                                still admissible, much tighter on
+                                heterogeneous fleets (memoized per tp and
+                                skipped by a cost guard when the projected
+                                solver wall exceeds projected sim savings).
 Tier 3  materialize + simulate  the full pipeline (layer B&B, batch shares,
                                 1F1B step simulation).
 
@@ -42,6 +50,7 @@ import hashlib
 import math
 import os
 import pickle
+import time
 from concurrent.futures import ProcessPoolExecutor, as_completed
 from dataclasses import dataclass
 from multiprocessing import get_context
@@ -49,6 +58,7 @@ from typing import Sequence
 
 from ..obs import Obs, resolve_obs
 from .cluster import ClusterTopology
+from .costmodel import collective_floor
 from .fabric import default_fabric, set_default_fabric
 from .opgraph import ModelDesc
 from .planner import (SearchStats, StrategyPoint, materialize_plan,
@@ -60,7 +70,7 @@ from .simulator import StepSim, simulate_many
 # so _note_pruned is the single tally point for both (ISSUE 7 satellite —
 # the per-tier counters and the ``pruned`` total used to be bumped in five
 # separate places and could silently drift from ``cascade_candidates``).
-_TIERS = ("feasibility", "bound", "coarse")
+_TIERS = ("feasibility", "bound", "coarse", "lp")
 
 
 def _note_pruned(stats: SearchStats, obs: Obs, tier: str, n: int) -> None:
@@ -176,11 +186,14 @@ def _bound_context(topo: ClusterTopology, model: ModelDesc, *,
     # only the per-hop form above is load-bearing.  Cap (a) does NOT
     # survive routing — g routed pairs may share one fast physical edge
     # (e.g. a line graph's wrap-around pair reuses every link) — so it
-    # applies on complete graphs only.  NOTE: admissibility compares raw
-    # edge bandwidths against the beta-scaled simulator; a calibrated
-    # fabric with beta > 1 would price sims *below* the raw-bandwidth
-    # caps, so tools/calibrate_fabric.py clamps beta <= 1 (physical
-    # efficiency) and the never-over-prune property test guards the rest.
+    # applies on complete graphs only.  The caps are then scaled by the
+    # fabric's linearized rate (FabricModel.linear_bw): the simulator
+    # prices every hop at beta * bw, so a calibrated beta < 1 tightens the
+    # ring caps by the same factor, while linear_bw's clamp at 1 keeps a
+    # non-physical beta > 1 (which would price sims *below* the raw caps)
+    # from breaking admissibility — tools/calibrate_fabric.py clamps
+    # beta <= 1 anyway, and the never-over-prune property test guards the
+    # rest.
     pair_bws = sorted(pair_best.values(), reverse=True)
     dev_bws = sorted(incident.values(), reverse=True)
     n = len(alive)
@@ -221,6 +234,8 @@ def _bound_context(topo: ClusterTopology, model: ModelDesc, *,
                 pairs_crossed = g if g >= 3 else 1
                 caps.append(pair_bws[min(pairs_crossed, len(pair_bws)) - 1])
             ring_by_size.append(min(caps))
+    fab = default_fabric()
+    ring_by_size = [fab.linear_bw(bw) for bw in ring_by_size]
     L = model.n_layers
     return _BoundCtx(
         classes=classes,
@@ -239,6 +254,24 @@ def _ring_bw(bctx: _BoundCtx, group_size: int) -> float:
         return 0.0
     return bctx.ring_bw_by_size[
         min(group_size, len(bctx.ring_bw_by_size)) - 1]
+
+
+def _sync_floor(point: StrategyPoint, bctx: _BoundCtx) -> float:
+    """Gradient-sync ring floor shared by the coarse and LP tiers: the
+    point's sync collective (decomposed rs+ag, or the naive root-funnel
+    reduce+broadcast pair) on the *mean* per-stage parameter shard at the
+    fastest dp-ring bandwidth.  The simulator adds dp_sync — the max over
+    stages, for both sync modes >= the decomposed ring time — after the
+    pipeline flush, so this undershoots it for every materialization."""
+    dp = point.dp
+    if dp <= 1:
+        return 0.0
+    bw = _ring_bw(bctx, dp)
+    if bw <= 0:
+        return 0.0
+    shard = sum(bctx.layer_params) * bctx.dtype_bytes / (point.pp * point.tp)
+    kind = "rs_ag" if point.grad_sync == "rs_ag" else "reduce_broadcast"
+    return collective_floor(kind, shard, dp, bw)
 
 
 def _coarse_bound(point: StrategyPoint, bctx: _BoundCtx, *,
@@ -264,6 +297,17 @@ def _coarse_bound(point: StrategyPoint, bctx: _BoundCtx, *,
       * the bottleneck stage serializes all M microbatches and by
         pigeonhole holds >= 1/pp of the total work, so the chain also
         scales by max(1, M / pp);
+      * the 1F1B drain lemma adds a fill/drain floor the busy-time factor
+        misses on deep pipelines (M <= pp): for ANY stage s, microbatch 0
+        must cross every earlier stage before s's first forward, round-trip
+        the later stages before s's first backward, s then serializes its M
+        backwards, and the last microbatch's backward still drains through
+        the earlier stages — so makespan >= chain + (M-1) * bwd_s.  With
+        bwd_s >= (fwd_s + bwd_s) / 2 for every stage the simulator prices
+        (bwd = 2x fwd compute + the same collectives; remat only raises
+        it), the bottleneck stage (>= chain / pp by pigeonhole) gives
+        makespan >= chain * (1 + (M-1) / (2 pp)) — the pipeline factor is
+        the max of both legs;
       * the gradient-sync floor (2x ring factor on the mean per-stage
         parameter shard) adds on top — the simulator adds dp_sync (the max
         over stages, for both sync modes >= the decomposed ring time) after
@@ -295,22 +339,10 @@ def _coarse_bound(point: StrategyPoint, bctx: _BoundCtx, *,
     if tp > 1:
         bw = _ring_bw(bctx, tp)
         if bw > 0:
-            ar = 2.0 * (tp - 1) / tp * act / bw
-            chain += 4.0 * len(bctx.layer_flops1) * ar
-    pipe = chain * max(1.0, M / pp)
-    sync = 0.0
-    if dp > 1:
-        bw = _ring_bw(bctx, dp)
-        if bw > 0:
-            # mean per-stage parameter shard (max over stages >= mean).
-            # The sync mode is part of the strategy point: decomposed rs+ag
-            # moves 2(dp-1)/dp shards over the ring; the naive
-            # reduce+broadcast pair funnels 2(dp-1) through the root.
-            shard = sum(bctx.layer_params) * bctx.dtype_bytes / (pp * tp)
-            factor = 2.0 * (dp - 1) / dp if point.grad_sync == "rs_ag" \
-                else 2.0 * (dp - 1)
-            sync = factor * shard / bw
-    return pipe + sync
+            chain += 4.0 * len(bctx.layer_flops1) \
+                * collective_floor("all_reduce", act, tp, bw)
+    pipe = chain * max(1.0, M / pp, 1.0 + (M - 1.0) / (2.0 * pp))
+    return pipe + _sync_floor(point, bctx)
 
 
 def coarse_lower_bound(point: StrategyPoint, topo: ClusterTopology,
@@ -364,15 +396,22 @@ class CandidateOutcome:
 def _score_variant(point: StrategyPoint, refine: bool,
                    topo: ClusterTopology, model: ModelDesc, *,
                    global_batch: int, seq: int, ctx=None,
-                   memo: dict | None = None, obs=None
+                   memo: dict | None = None, obs=None,
+                   plans: dict | None = None
                    ) -> tuple[ParallelPlan, StepSim] | None:
     """Cache-aware materialize + simulate; None on rejection (the candidate
     raised ValueError/ZeroDivisionError somewhere in the pipeline).  ``obs``
     reaches :func:`repro.core.simulator.simulate_many` so traced serial
     searches record per-candidate ``sim.batch`` spans (worker chunks leave
     it unset — shared-bound timing makes their sim counts nondeterministic,
-    and the chunk span already covers the time)."""
+    and the chunk span already covers the time).  ``plans`` is a read-only
+    materialization snapshot (worker processes receive the parent
+    :class:`repro.core.engine.StrategyCache`'s already-built plans in the
+    context blob) consulted after ``ctx`` — a snapshot hit skips the
+    materialization pipeline but never the simulation."""
     plan = ctx.get_plan(point, refine) if ctx is not None else None
+    if plan is None and plans is not None:
+        plan = plans.get((point, refine))
     if plan is None:
         try:
             plan = materialize_variant(point, refine, topo, model,
@@ -406,6 +445,7 @@ _SHARED_BOUND = None       # multiprocessing.Value('d') injected at pool init
 _CTX_TOKEN: str | None = None
 _CTX_STATE: tuple | None = None
 _CTX_MEMO: dict = {}
+_CTX_SNAPSHOT: dict = {}   # read-only (point, refine) -> ParallelPlan
 
 
 def _pool_init(shared_bound) -> None:
@@ -427,13 +467,19 @@ def _load_search_ctx(token: str, blob: bytes) -> tuple:
     search — chunks of the same search reuse it (amortized setup).  The
     parent's default :class:`repro.core.fabric.FabricModel` rides along and
     is installed as this worker's default, so serial and process-parallel
-    searches price identically even under a non-default calibration (the
-    token hashes the blob, so a fabric change forces a context reload)."""
-    global _CTX_TOKEN, _CTX_STATE, _CTX_MEMO
+    searches price identically even under a non-default calibration; so
+    does a read-only :class:`repro.core.engine.StrategyCache`
+    materialization snapshot, sparing workers plan rebuilds the parent
+    already paid for.  The token hashes the whole blob — fabric AND
+    snapshot version included — so a stale context (recalibrated fabric,
+    cache grown since the last search) forces a reload instead of serving
+    old state."""
+    global _CTX_TOKEN, _CTX_STATE, _CTX_MEMO, _CTX_SNAPSHOT
     if token != _CTX_TOKEN:
-        *state, fabric = pickle.loads(blob)
+        *state, fabric, snapshot = pickle.loads(blob)
         set_default_fabric(fabric)
         _CTX_STATE = tuple(state)
+        _CTX_SNAPSHOT = snapshot
         _CTX_TOKEN = token
         _CTX_MEMO = {}
     return _CTX_STATE  # type: ignore[return-value]
@@ -486,7 +532,7 @@ def _score_chunk(token: str, blob: bytes,
             continue
         res = _score_variant(point, refine, topo, model,
                              global_batch=global_batch, seq=seq,
-                             memo=_CTX_MEMO)
+                             memo=_CTX_MEMO, plans=_CTX_SNAPSHOT)
         if res is None:
             rejected += 1
             continue
@@ -567,17 +613,22 @@ class SearchExecutor:
     def run(self, topo: ClusterTopology, model: ModelDesc, *,
             global_batch: int, seq: int,
             tasks: Sequence[tuple[float, int, StrategyPoint, bool]],
-            threshold: float, tighten: bool, obs: Obs | None = None
+            threshold: float, tighten: bool, obs: Obs | None = None,
+            snapshot: "dict[tuple[StrategyPoint, bool], ParallelPlan] "
+                      "| None" = None
             ) -> tuple[list[tuple[int, StrategyPoint, bool,
                                   ParallelPlan, StepSim]], int, int]:
         """Score ``tasks`` across the pool; returns (outcomes, rejected,
         pruned) merged over all chunks.  With an enabled ``obs``, worker
         chunk spans are shipped back and re-parented under the caller's
-        current span (one Perfetto lane per worker process)."""
+        current span (one Perfetto lane per worker process).  ``snapshot``
+        ships the parent session cache's already-materialized plans to the
+        workers read-only (it is part of the hashed context blob, so a
+        grown cache invalidates stale worker contexts)."""
         obs = resolve_obs(obs)
         pool = self._ensure()
         blob = pickle.dumps((topo, model, global_batch, seq,
-                             default_fabric()),
+                             default_fabric(), snapshot or {}),
                             protocol=pickle.HIGHEST_PROTOCOL)
         token = hashlib.sha1(blob).hexdigest()
         assert self._bound is not None
@@ -622,7 +673,7 @@ class SearchExecutor:
             return []
         pool = self._ensure()
         blob = pickle.dumps((topo, model, global_batch, seq,
-                             default_fabric()),
+                             default_fabric(), {}),
                             protocol=pickle.HIGHEST_PROTOCOL)
         token = hashlib.sha1(blob).hexdigest()
         n_chunks = max(1, min(len(plans), self.n_procs))
@@ -641,6 +692,37 @@ class SearchExecutor:
 # The cascade
 # ---------------------------------------------------------------------------
 
+# LP-tier cost-guard constants.  A candidate's simulation walks every DP
+# rank over its stages' layers plus the M x pp 1F1B grid, so its wall is
+# estimated at _LP_SIM_SECONDS_PER_UNIT * (dp*L + dp*pp*M) — order of
+# magnitude is all the guard needs.  The guard blocks a fresh LP solve only
+# when the projected solver wall (distinct unsolved tp values x measured
+# solve EMA) exceeds _LP_GUARD_SAVINGS_FRACTION of the projected remaining
+# sim wall; per-tp memoization keeps real searches at a handful of solves,
+# so the guard binds only on degenerate tiny candidate sets where even a
+# 100% prune rate could not repay the solver.
+_LP_SIM_SECONDS_PER_UNIT = 1e-4
+_LP_GUARD_SAVINGS_FRACTION = 0.1
+
+
+def _lp_est_sim_seconds(point: StrategyPoint, n_layers: int) -> float:
+    return _LP_SIM_SECONDS_PER_UNIT * (
+        point.dp * n_layers
+        + point.dp * point.pp * point.microbatches)
+
+
+def _lp_guard_blocks(lp_ctx,
+                     remaining: "Sequence[tuple[float, int, StrategyPoint, "
+                                "bool]]") -> bool:
+    """True when the LP tier's projected cost exceeds its projected
+    savings for the rest of this cascade (see constants above)."""
+    n_layers = lp_ctx.model.n_layers
+    unsolved = {p.tp for _, _, p, _ in remaining if lp_ctx.would_solve(p.tp)}
+    projected_lp = len(unsolved) * lp_ctx.solve_wall_estimate()
+    projected_sim = sum(_lp_est_sim_seconds(p, n_layers)
+                       for _, _, p, _ in remaining)
+    return projected_lp > _LP_GUARD_SAVINGS_FRACTION * projected_sim
+
 
 def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
                      global_batch: int, seq: int,
@@ -649,6 +731,7 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
                      keep_top_k: int = 1,
                      executor: SearchExecutor | None = None,
                      prune: bool = True,
+                     lp_prune: bool = True,
                      stats: SearchStats | None = None,
                      max_sims: int | None = None,
                      obs: Obs | None = None
@@ -666,7 +749,14 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
     sound: a skipped candidate might have been the argmin, so the
     serial == parallel and cascade == exhaustive identities are waived when
     it binds.  The hierarchical island tier (:mod:`repro.core.islands`)
-    uses it to keep fleet-scale sub-searches bounded."""
+    uses it to keep fleet-scale sub-searches bounded.
+
+    ``lp_prune`` toggles the tier-2.5 LP-relaxation bound
+    (:mod:`repro.core.mip`): admissible like tiers 1-2, so the argmin /
+    top-k portfolio is byte-identical with it on or off — only how many
+    candidates reach the simulator changes.  Set
+    ``REPRO_SEARCH_DEBUG=1`` to assert the tier monotonicity
+    ``point <= coarse <= lp <= simulated`` on every simulated candidate."""
     if stats is None:
         stats = SearchStats()
     obs = resolve_obs(obs)
@@ -676,7 +766,8 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
     # ``_note_pruned`` fails loudly instead of skewing cascade_candidates
     pruned_at_entry = stats.pruned
     tiers_at_entry = (stats.pruned_feasibility + stats.pruned_bound
-                      + stats.pruned_coarse)
+                      + stats.pruned_coarse + stats.pruned_lp)
+    debug = os.environ.get("REPRO_SEARCH_DEBUG", "") not in ("", "0")
     variants = (True, False) if topo.is_heterogeneous() else (False,)
     nv = len(variants)
     cascade = obs.span("search.cascade", n_points=len(points),
@@ -686,6 +777,7 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
     # canonical expansion: indices cover the FULL candidate list (pruned
     # included) so tie-breaking matches exhaustive scoring exactly
     bctx = _bound_context(topo, model, seq=seq) if prune else None
+    point_bounds: dict[StrategyPoint, tuple[float, float]] = {}
     tasks: list[tuple[float, int, StrategyPoint, bool]] = []
     with obs.span("search.tiers012"):
         for pi, point in enumerate(points):
@@ -708,8 +800,44 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
                     continue
             else:
                 lb1 = lb2 = 0.0
+            point_bounds[point] = (lb1, lb2)
             for vi, refine in enumerate(variants):
                 tasks.append((lb2, base + vi, point, refine))
+
+    # Tier 2.5: LP-relaxation bound (repro.core.mip).  Same admissibility
+    # contract as tiers 1-2 so it prunes against the same bounds — the
+    # packing LP is memoized per tp (a handful of solves per search), and
+    # the cost guard skips fresh solves outright when the projected solver
+    # wall for the remaining unsolved tp values exceeds a conservative
+    # fraction of the projected simulation wall still on the table (the
+    # tier can then not pay for itself — degenerate tiny searches).
+    lb3_by_variant: dict[tuple[StrategyPoint, bool], float] = {}
+    if prune and lp_prune and tasks:
+        from .mip import lp_bound_context
+        t_lp = time.perf_counter()
+        with obs.span("search.tier_lp", n_tasks=len(tasks)) as lp_span:
+            lp_ctx = lp_bound_context(topo, model, global_batch=global_batch,
+                                      seq=seq, bctx=bctx)
+            kept: list[tuple[float, int, StrategyPoint, bool]] = []
+            guard_skipped = 0
+            for ti, (lb2, index, point, refine) in enumerate(tasks):
+                lb3 = lb3_by_variant.get((point, refine))
+                if lb3 is None:
+                    if lp_ctx.would_solve(point.tp) \
+                            and _lp_guard_blocks(lp_ctx, tasks[ti:]):
+                        lb3 = lb2           # fall back to the coarse bound
+                        guard_skipped += 1
+                    else:
+                        lb3 = lp_ctx.variant_bound(point, refine, lb2)
+                    lb3_by_variant[(point, refine)] = lb3
+                if incumbent_bound is not None and lb3 >= incumbent_bound:
+                    _note_pruned(stats, obs, "lp", 1)
+                    continue
+                kept.append((lb3, index, point, refine))
+            tasks = kept
+            lp_span.set(solves=lp_ctx.lp_solves,
+                        guard_skipped=guard_skipped)
+        stats.lp_wall_time += time.perf_counter() - t_lp
     # best-first simulation order tightens the incumbent fastest; the index
     # tie-break keeps equal-bound ordering canonical
     tasks.sort(key=lambda t: (t[0], t[1]))
@@ -724,6 +852,20 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
 
     def note(index: int, point: StrategyPoint, refine: bool,
              plan: ParallelPlan, sim: StepSim) -> None:
+        if debug and prune:
+            # tier monotonicity: point <= coarse holds by the max() in the
+            # tier loop and coarse <= lp by the max() in point_bound — the
+            # load-bearing leg is lp <= simulated (admissibility)
+            lb1d, lb2d = point_bounds.get(point, (0.0, 0.0))
+            lb3d = lb3_by_variant.get((point, refine), lb2d)
+            ok = (lb1d <= lb2d * (1 + 1e-9) + 1e-12
+                  and lb2d <= lb3d * (1 + 1e-9) + 1e-12
+                  and lb3d <= sim.step_time * (1 + 1e-9) + 1e-12)
+            if not ok:
+                raise AssertionError(
+                    f"cascade tier monotonicity violated for {point} "
+                    f"refine={refine}: point={lb1d} coarse={lb2d} "
+                    f"lp={lb3d} simulated={sim.step_time}")
         outcomes.append(CandidateOutcome(index=index, point=point,
                                          refine=refine, plan=plan, sim=sim))
         sim_times.append(sim.step_time)
@@ -744,9 +886,12 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
     available: dict[int, tuple[ParallelPlan, StepSim]] = {}
     if executor is not None and len(tasks) > 1:
         # resolve session-cache hits in the parent first: they are free and
-        # pre-tighten the static bound the workers start from
+        # pre-tighten the static bound the workers start from.  Plans the
+        # cache materialized but never scored ride to the workers as a
+        # read-only snapshot so they skip the rebuild.
         hit_times: list[float] = []
         pending: list[tuple[float, int, StrategyPoint, bool]] = []
+        snapshot: dict[tuple[StrategyPoint, bool], ParallelPlan] = {}
         for bound, index, point, refine in tasks:
             plan = ctx.get_plan(point, refine) if ctx is not None else None
             sim = ctx.get_score(plan) \
@@ -754,6 +899,8 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
             if plan is not None and sim is not None:
                 hit_times.append(sim.step_time)
             else:
+                if plan is not None:
+                    snapshot[(point, refine)] = plan
                 pending.append((bound, index, point, refine))
         thr0 = math.inf
         if prune and len(hit_times) >= keep_top_k:
@@ -766,7 +913,7 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
             out, _rejected, _pruned = executor.run(
                 topo, model, global_batch=global_batch, seq=seq,
                 tasks=live, threshold=thr0, tighten=(keep_top_k == 1),
-                obs=obs)
+                obs=obs, snapshot=snapshot)
             for index, point, refine, plan, sim in out:
                 available[index] = (plan, sim)
     memo: dict = {}
@@ -777,13 +924,17 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
             continue
         thr = threshold()
         if prune and bound > thr:
-            # attribute the cut to the tier whose bound did it
-            if point_lower_bound(point, topo, model,
-                                 global_batch=global_batch,
-                                 seq=seq) > thr:
+            # attribute the cut to the cheapest tier whose bound did it —
+            # with the LP tier off, bound == the coarse bound and the lp
+            # branch is unreachable, so pruned_bound / pruned_coarse tally
+            # exactly as they did before the tier existed
+            lb1, lb2 = point_bounds[point]
+            if lb1 > thr:
                 _note_pruned(stats, obs, "bound", 1)
-            else:
+            elif lb2 > thr:
                 _note_pruned(stats, obs, "coarse", 1)
+            else:
+                _note_pruned(stats, obs, "lp", 1)
             continue
         got = available.get(index)
         if got is not None:
@@ -808,7 +959,7 @@ def score_candidates(topo: ClusterTopology, model: ModelDesc, *,
     obs.inc("search.simulated", stats.simulated)
     obs.inc("search.rejected", stats.rejected)
     tier_delta = (stats.pruned_feasibility + stats.pruned_bound
-                  + stats.pruned_coarse) - tiers_at_entry
+                  + stats.pruned_coarse + stats.pruned_lp) - tiers_at_entry
     if stats.pruned - pruned_at_entry != tier_delta:
         raise RuntimeError(
             f"cascade prune-counter drift: pruned "

@@ -157,7 +157,8 @@ def test_chrome_trace_round_trips_json(tmp_path):
     assert events and all(ev["ph"] == "X" for ev in events)
     names = {ev["name"] for ev in events}
     assert {"plan.hybrid", "plan.enumerate", "search.cascade",
-            "search.tiers012", "search.tier3", "sim.batch"} <= names
+            "search.tiers012", "search.tier_lp", "search.tier3",
+            "sim.batch"} <= names
     ids = {ev["args"]["span_id"] for ev in events}
     assert len(ids) == len(events)              # unique span ids
     for ev in events:
@@ -214,6 +215,8 @@ def test_search_counters_match_search_stats():
     assert snap.get("search.pruned.coarse", 0) == stats.pruned_coarse
     assert snap.get("search.pruned.bound", 0) == stats.pruned_bound
     assert snap.get("search.pruned.feasibility", 0) == stats.pruned_feasibility
+    assert snap.get("search.pruned.lp", 0) == stats.pruned_lp
+    assert stats.pruned_lp > 0           # hetero cluster: the LP tier bites
     assert snap["search.simulated"] == stats.simulated
 
 

@@ -154,6 +154,66 @@ def test_fabric_pipelined_invariants_on_random_sparse_graphs(ts):
         fab.edge_time(topo.link(0, 1).best_edge(size), size))
 
 
+@st.composite
+def hetero_model_and_cluster(draw):
+    """Random hetero/sparse cluster + small model, mirroring the ISSUE 5
+    cascade-soundness generator: random device mixes, random inter-node
+    bandwidth, and an optional random link-subset deletion that leaves
+    multi-hop-routed (possibly partitioned) pairs."""
+    from repro.core import hetero_cluster
+    heads = draw(st.sampled_from([2, 4]))
+    model = ModelDesc(name="h", n_layers=draw(st.integers(2, 6)),
+                      d_model=128 * heads, n_heads=heads, n_kv_heads=heads,
+                      d_ff=draw(st.sampled_from([512, 1024])), vocab=1000)
+    kinds = draw(st.sampled_from([{"V100": 4}, {"RTX4090D": 2, "V100": 2},
+                                  {"RTX4090D": 4, "V100": 4},
+                                  {"H100": 2, "V100": 2}]))
+    inter = draw(st.sampled_from([5e9, 25e9, 100e9]))
+    topo = hetero_cluster(kinds, inter_bw=inter,
+                          gpus_per_node=draw(st.sampled_from([2, 4])))
+    keys = sorted(topo.links)
+    if len(keys) > 1 and draw(st.booleans()):
+        for k in draw(st.sets(st.sampled_from(keys), max_size=len(keys) - 1)):
+            del topo.links[k]
+        topo.invalidate_snapshots()
+    gb = draw(st.sampled_from([4, 8, 16]))
+    return model, topo, gb
+
+
+@settings(max_examples=25, deadline=None)
+@given(hetero_model_and_cluster())
+def test_lp_lower_bound_admissible_on_random_clusters(mc):
+    """ISSUE 9 satellite: the tier-2.5 LP relaxation undershoots the
+    simulated step time of every (point, refine) candidate on randomized
+    sparse/hetero clusters, and the tier chain stays monotone
+    (point <= coarse <= lp <= sim)."""
+    from repro.core import (coarse_lower_bound, enumerate_strategies,
+                            lp_bound_context, lp_lower_bound,
+                            materialize_variant, simulate_training_step)
+    model, topo, gb = mc
+    pts, _ = enumerate_strategies(topo, model, global_batch=gb)
+    ctx = lp_bound_context(topo, model, global_batch=gb, seq=256)
+    variants = (True, False) if topo.is_heterogeneous() else (False,)
+    for p in pts:
+        lb2 = coarse_lower_bound(p, topo, model, global_batch=gb, seq=256)
+        lb3p = lp_lower_bound(p, topo, model, global_batch=gb, seq=256,
+                              ctx=ctx)
+        assert lb3p >= lb2 - 1e-12, p
+        for refine in variants:
+            lb3 = lp_lower_bound(p, topo, model, global_batch=gb, seq=256,
+                                 refine=refine, ctx=ctx)
+            assert lb3 >= lb3p - 1e-12, (p, refine)
+            try:
+                plan = materialize_variant(p, refine, topo, model,
+                                           global_batch=gb, seq=256)
+                sim = simulate_training_step(plan, model, topo,
+                                             global_batch=gb, seq=256)
+            except (ValueError, ZeroDivisionError):
+                continue
+            rel = 1e-9 * max(1.0, sim.step_time)
+            assert lb3 <= sim.step_time + rel, (p, refine)
+
+
 @settings(max_examples=15, deadline=None)
 @given(st.floats(0.05, 1.0))
 def test_slowdown_never_speeds_up_schedule(factor):

@@ -265,3 +265,148 @@ if _HAS_HYPOTHESIS:
                           with_baseline=False)
         assert cas.plan.to_json() == exh.plan.to_json()
         assert cas.predicted.step_time == exh.predicted.step_time
+
+
+# ---------------------------------------------------------------------------
+# Tier 2.5: LP-relaxation bound (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+def test_lp_tier_keeps_argmin_and_attributes_prunes():
+    """The LP tier is admissible: toggling it changes only how many
+    candidates reach the simulator, never the argmin or the portfolio —
+    and it must not steal cuts from the coarse tier's tally."""
+    topo = hetero_cluster({"RTX4090D": 4, "V100": 4}, gpus_per_node=4)
+    on = plan_hybrid(topo, DESC, global_batch=32, seq=1024,
+                     with_baseline=False, top_k=3)
+    off = plan_hybrid(topo, DESC, global_batch=32, seq=1024,
+                      with_baseline=False, top_k=3, lp_prune=False)
+    assert on.plan.to_json() == off.plan.to_json()
+    assert on.predicted.step_time == off.predicted.step_time
+    for (pa, _), (pb, _) in zip(on.top_plans, off.top_plans):
+        assert pa.to_json() == pb.to_json()
+    s_on, s_off = on.search_stats, off.search_stats
+    assert s_off.pruned_lp == 0 and s_off.lp_wall_time == 0.0
+    assert s_on.pruned_lp > 0
+    assert s_on.simulated < s_off.simulated
+    assert s_on.prune_rate > s_off.prune_rate
+    assert s_on.lp_wall_time > 0.0
+    # attribution: a cut only lands in pruned_lp when the coarse bound
+    # alone would NOT have made it — coarse's tally is invariant
+    assert s_on.pruned_coarse == s_off.pruned_coarse
+    assert s_on.pruned_bound == s_off.pruned_bound
+    assert s_on.cascade_candidates == s_off.cascade_candidates
+
+
+def test_lp_tier_debug_asserts_monotonicity(monkeypatch):
+    """REPRO_SEARCH_DEBUG=1 checks point <= coarse <= lp <= simulated on
+    every simulated candidate; a clean search must sail through with the
+    same result as the untraced run."""
+    topo = hetero_cluster({"RTX4090D": 4, "V100": 4}, gpus_per_node=4)
+    base = plan_hybrid(topo, DESC, global_batch=32, seq=1024,
+                       with_baseline=False)
+    monkeypatch.setenv("REPRO_SEARCH_DEBUG", "1")
+    dbg = plan_hybrid(topo, DESC, global_batch=32, seq=1024,
+                      with_baseline=False)
+    assert dbg.plan.to_json() == base.plan.to_json()
+    assert dbg.search_stats.pruned_lp > 0
+
+
+def test_prune_counter_drift_check_fires(monkeypatch):
+    """A tally site that bumps ``stats.pruned`` without going through
+    ``_note_pruned`` must fail loudly (the ISSUE 7 drift invariant now
+    covers ``pruned_lp`` too)."""
+    from repro.core import search as search_mod
+
+    def bypassing_note(stats, obs, tier, n):
+        if n > 0:
+            stats.pruned += n        # skips the per-tier counter + registry
+
+    monkeypatch.setattr(search_mod, "_note_pruned", bypassing_note)
+    topo = hetero_cluster({"RTX4090D": 4, "V100": 4}, gpus_per_node=4)
+    pts, _ = enumerate_strategies(topo, DESC, global_batch=32)
+    with pytest.raises(RuntimeError, match="drift"):
+        score_candidates(topo, DESC, global_batch=32, seq=1024,
+                         points=pts, stats=SearchStats(),
+                         incumbent_bound=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Worker context blob: snapshot rides along, token hashes it (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+def test_worker_context_blob_hashes_snapshot(monkeypatch):
+    """The cache's materialization snapshot is part of the pickled worker
+    context, and the context token is the blob hash — so a snapshot that
+    grew since the last search forces a worker-side reload instead of
+    serving stale plans."""
+    import hashlib
+    import pickle
+
+    from repro.core import search as search_mod
+    from repro.core.fabric import default_fabric
+
+    monkeypatch.setattr(search_mod, "_CTX_TOKEN", None)
+    monkeypatch.setattr(search_mod, "_CTX_STATE", None)
+    monkeypatch.setattr(search_mod, "_CTX_MEMO", {})
+    monkeypatch.setattr(search_mod, "_CTX_SNAPSHOT", {})
+
+    topo = hetero_cluster({"RTX4090D": 4, "V100": 4}, gpus_per_node=4)
+    pts, _ = enumerate_strategies(topo, DESC, global_batch=32)
+    p = pts[0]
+    plan = materialize_variant(p, True, topo, DESC, global_batch=32,
+                               seq=1024)
+
+    def pack(snapshot):
+        blob = pickle.dumps((topo, DESC, 32, 1024, default_fabric(),
+                             snapshot), protocol=pickle.HIGHEST_PROTOCOL)
+        return hashlib.sha1(blob).hexdigest(), blob
+
+    t_empty, b_empty = pack({})
+    t_snap, b_snap = pack({(p, True): plan})
+    assert t_empty != t_snap             # the token covers the snapshot
+
+    search_mod._load_search_ctx(t_empty, b_empty)
+    assert search_mod._CTX_SNAPSHOT == {}
+    search_mod._CTX_MEMO["sentinel"] = 1
+    search_mod._load_search_ctx(t_empty, b_empty)
+    assert search_mod._CTX_MEMO.get("sentinel") == 1   # same token: no reload
+    search_mod._load_search_ctx(t_snap, b_snap)
+    assert (p, True) in search_mod._CTX_SNAPSHOT       # new token: reload
+    assert "sentinel" not in search_mod._CTX_MEMO
+
+
+def test_worker_chunk_consumes_snapshot_plan(monkeypatch):
+    """In-process run of the worker chunk entry point: a plan shipped in
+    the read-only snapshot is reused (not rebuilt) and scores identically
+    to simulating it directly."""
+    import hashlib
+    import pickle
+
+    from repro.core import search as search_mod
+    from repro.core.fabric import default_fabric
+
+    monkeypatch.setattr(search_mod, "_CTX_TOKEN", None)
+    monkeypatch.setattr(search_mod, "_CTX_STATE", None)
+    monkeypatch.setattr(search_mod, "_CTX_MEMO", {})
+    monkeypatch.setattr(search_mod, "_CTX_SNAPSHOT", {})
+
+    topo = hetero_cluster({"RTX4090D": 4, "V100": 4}, gpus_per_node=4)
+    pts, _ = enumerate_strategies(topo, DESC, global_batch=32)
+    p = pts[0]
+    plan = materialize_variant(p, True, topo, DESC, global_batch=32,
+                               seq=1024)
+    blob = pickle.dumps((topo, DESC, 32, 1024, default_fabric(),
+                         {(p, True): plan}),
+                        protocol=pickle.HIGHEST_PROTOCOL)
+    token = hashlib.sha1(blob).hexdigest()
+    out, rejected, pruned, delta = search_mod._score_chunk(
+        token, blob, [(0.0, 0, p, True)], math.inf, False)
+    assert rejected == 0 and pruned == 0 and delta is None
+    [(index, point, refine, oplan, sim)] = out
+    assert (index, point, refine) == (0, p, True)
+    assert oplan.to_json() == plan.to_json()
+    direct = simulate_training_step(plan, DESC, topo, global_batch=32,
+                                    seq=1024)
+    assert sim.step_time == direct.step_time
