@@ -1,0 +1,126 @@
+"""Planner-service arrival storm: multi-tenant replay through
+``repro.service.PlannerService``.
+
+Replays every registered ``multi_tenant`` scenario family (seeded job
+arrivals + network-event timeline, ``repro.scenarios.tenancy``) through
+one shared-cluster :class:`~repro.service.PlannerService` and reports,
+per family:
+
+  * admission outcomes (admitted / rejected / finished, peak queue depth),
+  * cross-job cache effectiveness — cold searches vs plan-store hits on
+    isomorphic twins (``cache_hit_rate``),
+  * replan volume + latency (mean / p99 over every per-job replan),
+  * exact-invalidation volume (entries dropped by network events),
+  * ``serial_matches_threaded`` — a second replay with a 4-worker pool
+    must produce byte-identical per-job plan sequences and identical
+    admission/cache counters (the service's frozen-round determinism
+    contract).
+
+Gates (the ISSUE 10 acceptance criteria): the 32-job storm family must
+sustain a cross-job cache hit rate >= 50% on its bucketed twins, p99
+replan latency must stay under an absolute wall budget, and every family
+must replay deterministically serial == threaded.  The JSON rows are
+written *before* the gates run so a failed assertion never discards the
+telemetry that diagnoses it; ``benchmarks/compare.py`` re-checks the same
+invariants against the committed baseline in CI.
+
+PYTHONPATH=src python -m benchmarks.bench_service [--quick] [--json PATH]
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.scenarios import build_tenant, list_tenant_scenarios, to_job_specs
+from repro.scenarios.tenancy import get_tenant_scenario
+from repro.service import PlannerService
+from benchmarks.common import emit, write_json
+
+# p99 budget for one warm replan under the storm (absolute, host-independent
+# slack: measured ~0.03 s on a shared 2-vCPU container at max_candidates=96;
+# a warm path regressing to cold search lands well above this)
+P99_BUDGET_S = 0.75
+_SEED = 0
+_THREAD_WORKERS = 4
+
+
+def _replay(family: str, workers: int, max_candidates: int):
+    topo, arrivals, trace = build_tenant(family, seed=_SEED)
+    gpn = get_tenant_scenario(family).gpus_per_node
+    specs = to_job_specs(arrivals, gpus_per_node=gpn)
+    svc = PlannerService(topo, workers=workers, max_candidates=max_candidates)
+    t0 = time.perf_counter()
+    report = svc.replay(specs, list(trace.to_events()))
+    return report, time.perf_counter() - t0
+
+
+def run(quick: bool = False, json_path: str | None = None) -> list[dict]:
+    """Replay every multi_tenant family serial + threaded, emit CSV/JSON,
+    enforce the hit-rate / latency / determinism gates.  Returns rows."""
+    max_candidates = 48 if quick else 96
+    rows: list[dict] = []
+    for family in list_tenant_scenarios():
+        serial, wall_s = _replay(family, 1, max_candidates)
+        threaded, wall_t = _replay(family, _THREAD_WORKERS, max_candidates)
+        matches = (
+            serial.plan_digests == threaded.plan_digests
+            and (serial.admitted, serial.rejected, serial.finished,
+                 serial.cold_searches, serial.cache_hits, serial.replans,
+                 serial.invalidated)
+            == (threaded.admitted, threaded.rejected, threaded.finished,
+                threaded.cold_searches, threaded.cache_hits, threaded.replans,
+                threaded.invalidated))
+        walls = serial.replan_walls
+        rows.append({
+            "family": family,
+            "jobs": serial.arrivals,
+            "events": serial.events,
+            "admitted": serial.admitted,
+            "rejected": serial.rejected,
+            "finished": serial.finished,
+            "max_queue_depth": serial.max_queue_depth,
+            "cold_searches": serial.cold_searches,
+            "cache_hits": serial.cache_hits,
+            "cache_hit_rate": round(serial.cache_hit_rate, 4),
+            "replans": serial.replans,
+            "invalidated": serial.invalidated,
+            "mean_replan_s": round(sum(walls) / len(walls), 5) if walls
+            else 0.0,
+            "p99_replan_s": round(serial.percentile(99), 5),
+            "events_per_s": round(serial.events / wall_s, 1),
+            "wall_s": round(wall_s, 2),
+            "threaded_wall_s": round(wall_t, 2),
+            "serial_matches_threaded": matches,
+        })
+    emit(rows, "bench_service (multi-tenant arrival storms through "
+               "PlannerService: shared cross-job cache, admission queue, "
+               "contention-charged replans; serial vs 4-worker replay)")
+    if json_path:
+        write_json(rows, json_path, quick=quick)
+
+    # -- gates ---------------------------------------------------------------
+    by_family = {r["family"]: r for r in rows}
+    storm = by_family["multi_tenant_storm"]
+    # acceptance: the 32-job storm's bucketed twins reuse searches
+    assert storm["jobs"] >= 32, storm
+    assert storm["cache_hit_rate"] >= 0.5, storm
+    # every family replays deterministically, serial == threaded
+    for r in rows:
+        assert r["serial_matches_threaded"], r
+    # every admitted job actually ran to completion inside the horizon
+    for r in rows:
+        assert r["finished"] == r["admitted"], r
+    # warm replans stay warm: p99 under the absolute budget
+    for r in rows:
+        assert r["p99_replan_s"] <= P99_BUDGET_S, r
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None, help="write rows as JSON")
+    args = ap.parse_args()
+    run(quick=args.quick, json_path=args.json)

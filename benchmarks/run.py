@@ -22,7 +22,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_planner_search, bench_replan,
-                            bench_scenarios, fig2_roofline,
+                            bench_scenarios, bench_service, fig2_roofline,
                             fig3_allreduce_decomp, fig6a_hetero_similar,
                             fig6b_hetero_disparate, fig6c_dynamic_bw)
     suites = [
@@ -38,6 +38,7 @@ def main() -> None:
                                           trace_path=args.trace)),
         ("bench_replan", lambda: bench_replan.run(quick=args.quick)),
         ("bench_scenarios", lambda: bench_scenarios.run(quick=args.quick)),
+        ("bench_service", lambda: bench_service.run(quick=args.quick)),
     ]
     failures = []
     for name, fn in suites:

@@ -501,6 +501,23 @@ class ReplanEngine:
             handle.__exit__(None, None, None)
         return res
 
+    def seed_incumbent(self, topo: ClusterTopology, plan: ParallelPlan,
+                       sim: StepSim) -> None:
+        """Adopt an externally-provided incumbent as if :meth:`plan` had
+        produced it — warm :meth:`replan` paths dispatch against it without
+        a cold search.  The cross-job planner service uses this to hand an
+        engine a shared-cache plan remapped onto its device slice
+        (:meth:`repro.service.SharedStrategyCache.lookup`); the portfolio
+        starts empty, so the first bandwidth re-score falls back to
+        re-simulating the incumbent alone and rebuilds from there."""
+        self.incumbent = (plan, sim)
+        self._device_key = self.cache.fingerprint(topo).device_key
+        self._bw_factor = {}
+        ctx = self.cache.context(topo, self.model,
+                                 global_batch=self.global_batch, seq=self.seq,
+                                 gpus_per_node=self.gpus_per_node)
+        ctx.put_score(plan, sim)
+
     def score_plan(self, plan: ParallelPlan,
                    topo: ClusterTopology) -> StepSim | None:
         """Cache-backed simulation of an explicit plan.  Returns None when

@@ -295,17 +295,77 @@ class ReconfigCostModel:
         from .fabric import default_fabric
         return default_fabric().path_time(topo, a, b, size, routing=routing)
 
+    @staticmethod
+    def _pair_links(topo: ClusterTopology, a: int, b: int,
+                    table) -> list[tuple[tuple[int, int], float]]:
+        """The physical ``(min, max)`` link keys (with per-hop bandwidth) a
+        reshard pair actually rides: the live direct link when one exists,
+        otherwise every hop of the widest route — the same per-edge
+        serialization domains :func:`repro.core.simulator.simulate_schedule`
+        claims for relayed transfers.  Unreachable pairs ride nothing (they
+        are store-served)."""
+        direct = table.hop_price(a, b)
+        if direct is not None:
+            return [((min(a, b), max(a, b)), direct[0])]
+        route = table.route(a, b)
+        if route is None:
+            return []
+        out = []
+        for u, v in zip(route.path, route.path[1:]):
+            hop = table.hop_price(u, v)
+            if hop is not None:
+                out.append(((min(u, v), max(u, v)), hop[0]))
+        return out
+
+    def edge_traffic(self, old: ParallelPlan, new: ParallelPlan,
+                     topo: ClusterTopology) -> dict[tuple[int, int], float]:
+        """Route-expanded reshard traffic of the switch: physical link key
+        ``(min, max)`` -> bytes this switch pushes over that link (a relayed
+        pair charges every hop).  This is what one job's reshard looks like
+        *to another job sharing the fabric* — the load board concurrent
+        switches are priced against (see :meth:`cost`'s ``edge_load``)."""
+        pair_bytes, _ = self.reshard_traffic(old, new, topo)
+        if not pair_bytes:
+            return {}
+        table = topo.routing()
+        load: dict[tuple[int, int], float] = {}
+        for (src, dst), nbytes in sorted(pair_bytes.items()):
+            for key, _bw in self._pair_links(topo, src, dst, table):
+                load[key] = load.get(key, 0.0) + nbytes
+        return load
+
     def cost(self, old: ParallelPlan, new: ParallelPlan,
-             topo: ClusterTopology) -> ReconfigCost:
-        """Price switching ``old -> new`` on (post-event) ``topo``."""
+             topo: ClusterTopology, *,
+             edge_load: dict[tuple[int, int], float] | None = None
+             ) -> ReconfigCost:
+        """Price switching ``old -> new`` on (post-event) ``topo``.
+
+        ``edge_load`` maps physical link keys ``(min, max)`` to *other*
+        jobs' in-flight bytes on that link (their :meth:`edge_traffic`).
+        Each reshard pair then queues behind the foreign bytes on its most
+        contended hop — ``extra / (beta * hop_bw)`` added to the solo fabric
+        price, exactly the simulator's serialize-behind-the-edge semantics.
+        Without it the model prices every switch as if the job owned the
+        fabric, silently optimistic whenever two jobs reshard at once."""
         if old.structural_key() == new.structural_key():
             return _ZERO
         pair_bytes, store_bytes = self.reshard_traffic(old, new, topo)
         per_dev: dict[int, float] = {}
         bottleneck = math.inf
         table = topo.routing() if pair_bytes else None
+        beta = 1.0
+        if edge_load and pair_bytes:
+            from .fabric import default_fabric
+            beta = max(default_fabric().beta, 1e-12)
         for (src, dst), nbytes in sorted(pair_bytes.items()):
             t, bw = self._path_time(topo, src, dst, nbytes, routing=table)
+            if edge_load:
+                queue = 0.0
+                for key, hop_bw in self._pair_links(topo, src, dst, table):
+                    extra = edge_load.get(key, 0.0)
+                    if extra > 0 and hop_bw > 0:
+                        queue = max(queue, extra / (beta * hop_bw))
+                t += queue
             per_dev[src] = per_dev.get(src, 0.0) + t
             per_dev[dst] = per_dev.get(dst, 0.0) + t
             bottleneck = min(bottleneck, bw)
@@ -324,6 +384,33 @@ class ReconfigCostModel:
     def switch_seconds(self, old: ParallelPlan, new: ParallelPlan,
                        topo: ClusterTopology) -> float:
         return self.cost(old, new, topo).total_s
+
+    def concurrent_costs(self, switches: Sequence[
+            tuple[ParallelPlan, ParallelPlan, ClusterTopology]]
+            ) -> list[ReconfigCost]:
+        """Price several switches happening *at once* on a shared fabric.
+
+        Each switch is charged its own :meth:`cost` with ``edge_load`` set
+        to the sum of every *other* switch's :meth:`edge_traffic` — the
+        symmetric fixed-point of "everyone queues behind everyone else's
+        bytes".  Switches whose reshards ride disjoint links price exactly
+        their solo cost; switches colliding on a link each pay the queueing
+        term.  Deterministic in the input order (the pricing itself is
+        order-independent).  ``topo`` may differ per switch (per-job device
+        slices) — link keys are global device-id pairs, so traffic charged
+        by one slice is visible to any other slice sharing the link."""
+        traffics = [self.edge_traffic(old, new, topo)
+                    for old, new, topo in switches]
+        out: list[ReconfigCost] = []
+        for i, (old, new, topo) in enumerate(switches):
+            load: dict[tuple[int, int], float] = {}
+            for j, tr in enumerate(traffics):
+                if j == i:
+                    continue
+                for key, v in tr.items():
+                    load[key] = load.get(key, 0.0) + v
+            out.append(self.cost(old, new, topo, edge_load=load))
+        return out
 
     # -- calibration hooks -----------------------------------------------------
 

@@ -24,19 +24,44 @@ if TYPE_CHECKING:                              # pragma: no cover
 METRICS_KEY = "reproMetrics"
 
 
+# Base tid for named lanes — far above any real thread id so the synthetic
+# rows never collide with OS thread lanes in the same process group.
+_LANE_TID_BASE = 1_000_000
+
+
 def chrome_trace(obs: "Obs") -> dict:
     """The combined Chrome-trace/Perfetto document for ``obs``:
     ``traceEvents`` (one ``X`` event per finished span, µs timestamps,
     span/parent ids in ``args``) plus the metrics snapshot under
-    :data:`METRICS_KEY`."""
+    :data:`METRICS_KEY`.
+
+    Spans carrying a ``lane`` attribute (e.g. the planner service's
+    per-job ``service.replan`` spans, ``lane=<job name>``) are grouped
+    onto one synthetic named row per distinct lane value instead of their
+    OS thread id — a ``thread_name`` metadata event labels each row, so
+    Perfetto shows one timeline per job regardless of which worker thread
+    ran the replan."""
     events = []
+    lanes: dict[tuple[int, str], int] = {}       # (pid, lane) -> tid
     for s in obs.tracer.spans:
         if s.t1 is None:
             continue
+        tid = s.tid
+        lane = s.attrs.get("lane")
+        if lane is not None:
+            key = (s.pid, str(lane))
+            tid = lanes.get(key)
+            if tid is None:                       # first-seen order, stable
+                tid = _LANE_TID_BASE + len(lanes)
+                lanes[key] = tid
+                events.append({
+                    "ph": "M", "name": "thread_name", "pid": s.pid,
+                    "tid": tid, "args": {"name": str(lane)},
+                })
         events.append({
             "ph": "X", "name": s.name,
             "ts": s.t0 * 1e6, "dur": (s.t1 - s.t0) * 1e6,
-            "pid": s.pid, "tid": s.tid,
+            "pid": s.pid, "tid": tid,
             "args": {"span_id": s.span_id, "parent_id": s.parent_id,
                      **s.attrs},
         })

@@ -11,7 +11,10 @@ claim — paper §2.2 dynamic scenarios, §4 parallel simulation).
   * :mod:`repro.scenarios.harness` — replay through the simulator +
     ``ReplanEngine`` with static/adapted/greedy-oracle/DP-oracle policies
     (switch costs modeled via ``repro.core.ReconfigCostModel``),
-    process-parallel across scenarios, multi-seed mean/CI sweeps.
+    process-parallel across scenarios, multi-seed mean/CI sweeps,
+  * :mod:`repro.scenarios.tenancy` — seeded multi-tenant job-arrival
+    streams + the ``multi_tenant`` scenario family driving the
+    planner-service benchmarks (ISSUE 10).
 """
 
 from .catalog import (ScenarioSpec, build, build_trace, get_scenario,
@@ -21,6 +24,10 @@ from .generators import (congestion_bursts, diurnal_bandwidth,
 from .harness import (FamilySummary, HarnessConfig, PolicyResult,
                       ScenarioHarness, ScenarioReport, run_payloads,
                       run_scenario, summarize_reports)
+from .tenancy import (DEFAULT_SHAPES, TENANT_MODELS, JobArrival, JobShape,
+                      TenantScenarioSpec, build_tenant, get_tenant_scenario,
+                      job_arrivals, list_tenant_scenarios, register_tenant,
+                      to_job_specs)
 from .trace import TRACE_FORMAT, TRACE_VERSION, Trace, compose_traces
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -72,6 +72,7 @@ _REGISTRY: dict[str, ScenarioSpec] = {}
 
 
 def register(spec: ScenarioSpec) -> ScenarioSpec:
+    """Register a scenario spec under its (unique) name; returns it."""
     if spec.name in _REGISTRY:
         raise ValueError(f"scenario {spec.name!r} already registered")
     _REGISTRY[spec.name] = spec
@@ -79,6 +80,7 @@ def register(spec: ScenarioSpec) -> ScenarioSpec:
 
 
 def get_scenario(name: str) -> ScenarioSpec:
+    """Lookup by name; ``KeyError`` lists what is available."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -87,6 +89,7 @@ def get_scenario(name: str) -> ScenarioSpec:
 
 
 def list_scenarios() -> list[str]:
+    """Sorted registered scenario names."""
     return sorted(_REGISTRY)
 
 

@@ -105,6 +105,9 @@ class PolicyResult:
 
 @dataclass(frozen=True)
 class ScenarioReport:
+    """One (scenario, seed) replay: static / adapted / oracle policy
+    results plus replan accounting (see :meth:`to_row`)."""
+
     scenario: str
     seed: int
     n_devices: int

@@ -21,6 +21,10 @@ RP_ROW = {"model": "LLaMA_7B", "gpus": 16, "scenario": "bandwidth",
 SC_ROW = {"scenario": "cloud_spot", "seed": 0, "greedy_over_dp": 1.02,
           "replans": 3, "adapted_over_static": 0.88,
           "adapted_over_oracle": 1.04, "parallel_matches_sequential": True}
+SV_ROW = {"family": "multi_tenant_storm", "serial_matches_threaded": True,
+          "admitted": 32, "rejected": 0, "cold_searches": 14,
+          "replans": 109, "invalidated": 12, "cache_hit_rate": 0.56,
+          "p99_replan_s": 0.03}
 
 
 def test_identical_rows_pass():
@@ -120,7 +124,8 @@ def test_compare_dirs_missing_fresh_file_fails(tmp_path):
     fresh.mkdir()
     for spec, rows in ((SPECS["planner_search"], [PS_ROW]),
                        (SPECS["bench_replan"], [RP_ROW]),
-                       (SPECS["bench_scenarios"], [SC_ROW])):
+                       (SPECS["bench_scenarios"], [SC_ROW]),
+                       (SPECS["bench_service"], [SV_ROW])):
         (base / spec.baseline_file).write_text(json.dumps(rows))
         (fresh / spec.fresh_file).write_text(json.dumps(rows))
     assert compare_dirs(base, fresh) == []
@@ -169,6 +174,35 @@ def test_gates_skip_metrics_absent_from_baseline_row():
     for EVERY gate kind, so mixed schemas do not cross-fire."""
     both = [PS_ROW, MP_ROW]
     assert compare_rows("planner_search", both, both) == []
+
+
+def test_service_determinism_and_counters_hard_fail():
+    assert compare_rows("bench_service", [SV_ROW], [SV_ROW]) == []
+    v = compare_rows("bench_service", [SV_ROW],
+                     [dict(SV_ROW, serial_matches_threaded=False)])
+    assert [x.metric for x in v] == ["serial_matches_threaded"]
+    v = compare_rows("bench_service", [SV_ROW],
+                     [dict(SV_ROW, cold_searches=20, replans=100)])
+    assert sorted(x.metric for x in v) == ["cold_searches", "replans"]
+
+
+def test_service_hit_rate_floor_and_drift():
+    # under the absolute 0.5 acceptance floor: fails even if baseline agrees
+    low = dict(SV_ROW, cache_hit_rate=0.4)
+    v = compare_rows("bench_service", [low], [low])
+    assert [x.metric for x in v] == ["cache_hit_rate"]
+    # above the floor but >10% below baseline: the ratio gate fires
+    drifted = dict(SV_ROW, cache_hit_rate=0.50)
+    v = compare_rows("bench_service", [SV_ROW], [drifted])
+    assert [x.metric for x in v] == ["cache_hit_rate"]
+
+
+def test_service_p99_absolute_ceiling():
+    slower_but_under = dict(SV_ROW, p99_replan_s=0.5)
+    assert compare_rows("bench_service", [SV_ROW], [slower_but_under]) == []
+    blown = dict(SV_ROW, p99_replan_s=1.2)
+    v = compare_rows("bench_service", [SV_ROW], [blown])
+    assert [x.metric for x in v] == ["p99_replan_s"]
 
 
 def test_fleet_partition_drift_fails():

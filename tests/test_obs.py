@@ -306,3 +306,32 @@ def test_bench_meta_header_written_and_ignored_by_compare(tmp_path):
     assert compare_rows("planner_search", [ps], [bench_meta(quick=True), ps]) \
         == []
     assert compare_rows("planner_search", [bench_meta(), ps], [ps]) == []
+
+
+def test_chrome_trace_lane_attr_groups_onto_named_rows():
+    """Spans with a `lane` attr (the planner service's per-job spans) get
+    one synthetic named row per distinct lane value, labeled by a
+    thread_name metadata event; laneless spans keep their OS tid."""
+    obs = Obs()
+    with obs.span("service.admit", lane="job-0"):
+        pass
+    with obs.span("service.replan", lane="job-1"):
+        pass
+    with obs.span("service.replan", lane="job-0"):
+        pass
+    with obs.span("plain"):
+        pass
+    doc = chrome_trace(obs)
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert [m["args"]["name"] for m in meta] == ["job-0", "job-1"]
+    by_lane = {}
+    for e in doc["traceEvents"]:
+        if e["ph"] == "X" and "lane" in e["args"]:
+            by_lane.setdefault(e["args"]["lane"], set()).add(e["tid"])
+    assert len(by_lane["job-0"]) == 1 and len(by_lane["job-1"]) == 1
+    assert by_lane["job-0"] != by_lane["job-1"]
+    lane_tids = by_lane["job-0"] | by_lane["job-1"]
+    assert {m["tid"] for m in meta} == lane_tids   # rows are labeled
+    plain = [e for e in doc["traceEvents"]
+             if e["ph"] == "X" and e["name"] == "plain"]
+    assert plain[0]["tid"] not in lane_tids

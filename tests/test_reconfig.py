@@ -339,3 +339,59 @@ def test_calibrate_terms_without_store_signal_keeps_store_scale():
         [(truth.cost(a, b, topo).total_s, a, b, topo)])
     assert fabric == pytest.approx(3.0, rel=1e-6)
     assert store == 7.0                  # no store bytes observed: untouched
+
+
+# -- cross-job contention charging (ISSUE 10) --------------------------------
+
+
+def test_contended_cost_exceeds_solo_on_shared_links():
+    topo = tight_fabric()
+    a, b = _plan_pair(TINY, topo)
+    m = ReconfigCostModel(TINY)
+    traffic = m.edge_traffic(a, b, topo)
+    assert traffic, "switch moves no bytes — test premise broken"
+    solo = m.cost(a, b, topo).total_s
+    # a foreign job pushing the same byte volume over the same links
+    contended = m.cost(a, b, topo, edge_load=dict(traffic)).total_s
+    assert contended > solo
+    # the queueing term scales with the foreign load
+    heavier = m.cost(a, b, topo,
+                     edge_load={k: 4 * v for k, v in traffic.items()}).total_s
+    assert heavier > contended
+
+
+def test_contended_cost_ignores_disjoint_links():
+    topo = tight_fabric()
+    a, b = _plan_pair(TINY, topo)
+    m = ReconfigCostModel(TINY)
+    used = set(m.edge_traffic(a, b, topo))
+    # load on links this switch never touches prices exactly solo
+    foreign = {key: 1e12 for key in
+               ((min(u, v), max(u, v)) for u in topo.alive_ids()
+                for v in topo.alive_ids() if u < v)
+               if key not in used}
+    solo = m.cost(a, b, topo).total_s
+    assert m.cost(a, b, topo, edge_load=foreign).total_s == solo
+
+
+def test_concurrent_costs_disjoint_switches_price_solo():
+    topo = tight_fabric()
+    ids = sorted(topo.alive_ids())
+    left, right = topo.subtopology(ids[:4]), topo.subtopology(ids[4:])
+    la, lb = _plan_pair(TINY, left)
+    ra, rb = _plan_pair(TINY, right)
+    m = ReconfigCostModel(TINY)
+    joint = m.concurrent_costs([(la, lb, left), (ra, rb, right)])
+    assert joint[0].total_s == m.cost(la, lb, left).total_s
+    assert joint[1].total_s == m.cost(ra, rb, right).total_s
+
+
+def test_concurrent_costs_shared_fabric_charges_both():
+    topo = tight_fabric()
+    a, b = _plan_pair(TINY, topo)
+    m = ReconfigCostModel(TINY)
+    solo = m.cost(a, b, topo).total_s
+    back = m.cost(b, a, topo).total_s
+    joint = m.concurrent_costs([(a, b, topo), (b, a, topo)])
+    assert joint[0].total_s > solo
+    assert joint[1].total_s > back

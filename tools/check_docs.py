@@ -1,7 +1,7 @@
-"""Docs gate (ISSUE 6 satellite): intra-repo markdown links must resolve
-and the ``repro.core`` public API must be documented.
+"""Docs gate (ISSUE 6 satellite, widened by ISSUE 10): intra-repo
+markdown links must resolve and the public API must be documented.
 
-Two stdlib-only checks, run by the CI ``docs`` job and locally via::
+Four stdlib-only checks, run by the CI ``docs`` job and locally via::
 
     python tools/check_docs.py
 
@@ -10,12 +10,21 @@ Two stdlib-only checks, run by the CI ``docs`` job and locally via::
    (anchors are stripped; ``http(s)``/``mailto`` targets are skipped — CI
    must not depend on external availability).
 2. **Docstring check** — every public module, class and function defined
-   at module level under ``src/repro/core`` (plus ``benchmarks`` and
-   ``tools``) must carry a docstring.  Names with a leading underscore are
-   private and exempt.  The gate covers the planner core — the paper's
-   contribution and this repo's public API — not the auxiliary training
-   stack (``repro.models``, ``repro.launch``, ...), which predates the
-   gate; widen ``PY_ROOTS`` as those layers get audited.
+   at module level under ``src/repro/core``, ``src/repro/obs``,
+   ``src/repro/service``, ``src/repro/scenarios`` (plus ``benchmarks``
+   and ``tools``) must carry a docstring.  Names with a leading
+   underscore are private and exempt.  The gate covers the planner core
+   and its service/scenario layers — not the auxiliary training stack
+   (``repro.models``, ``repro.launch``, ...), which predates the gate;
+   widen ``PY_ROOTS`` as those layers get audited.
+3. **Service API coverage** — every public symbol exported by
+   ``repro.service`` (ast-collected from its ``__init__``) must appear in
+   ``docs/service.md``'s API table; stale docs fail the gate.
+4. **Gate-table coverage** — every metric gated by
+   ``benchmarks/compare.py`` (ast-collected ``Gate(...)`` first
+   arguments) must appear in ``docs/benchmarks.md`` — the doc drift this
+   PR swept (``mip_certified``, ``trace_overhead``, ...) cannot recur
+   silently.
 
 Exit code 1 with a per-violation listing on any failure.
 """
@@ -36,7 +45,8 @@ _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 MD_ROOTS = ("README.md", "ROADMAP.md", "CHANGES.md", "PAPER.md",
             "PAPERS.md", "ISSUE.md", "SNIPPETS.md")
 DOC_DIRS = ("docs",)
-PY_ROOTS = ("src/repro/core", "src/repro/obs", "benchmarks", "tools")
+PY_ROOTS = ("src/repro/core", "src/repro/obs", "src/repro/service",
+            "src/repro/scenarios", "benchmarks", "tools")
 
 
 def check_links() -> list[str]:
@@ -94,9 +104,65 @@ def check_docstrings() -> list[str]:
     return out
 
 
+def _exported_names(init_py: Path) -> list[str]:
+    """Public names a package ``__init__`` re-exports (``__all__`` when
+    assigned as a list/tuple literal, else the imported-name fallback)."""
+    tree = ast.parse(init_py.read_text(), filename=str(init_py))
+    for node in tree.body:
+        if isinstance(node, ast.Assign) \
+                and any(isinstance(t, ast.Name) and t.id == "__all__"
+                        for t in node.targets) \
+                and isinstance(node.value, (ast.List, ast.Tuple)):
+            return [c.value for c in node.value.elts
+                    if isinstance(c, ast.Constant) and isinstance(c.value,
+                                                                  str)]
+    names: list[str] = []
+    for node in tree.body:
+        if isinstance(node, ast.ImportFrom):
+            names.extend(a.asname or a.name for a in node.names
+                         if not (a.asname or a.name).startswith("_"))
+    return names
+
+
+def check_service_api() -> list[str]:
+    """Public ``repro.service`` symbols absent from ``docs/service.md``
+    (the API table must track the package), as violation strings."""
+    init_py = REPO / "src/repro/service/__init__.py"
+    doc = REPO / "docs/service.md"
+    if not init_py.exists():
+        return []
+    if not doc.exists():
+        return ["docs/service.md: missing (required by the service API "
+                "coverage gate)"]
+    text = doc.read_text()
+    return [f"docs/service.md: public repro.service symbol {name!r} "
+            f"not documented"
+            for name in _exported_names(init_py) if name not in text]
+
+
+def check_gate_tables() -> list[str]:
+    """Gated metrics in ``benchmarks/compare.py`` absent from
+    ``docs/benchmarks.md`` (gate-table drift), as violation strings."""
+    compare = REPO / "benchmarks/compare.py"
+    doc = REPO / "docs/benchmarks.md"
+    if not compare.exists() or not doc.exists():
+        return []
+    text = doc.read_text()
+    metrics: set[str] = set()
+    for node in ast.walk(ast.parse(compare.read_text())):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "Gate" and node.args \
+                and isinstance(node.args[0], ast.Constant):
+            metrics.add(node.args[0].value)
+    return [f"docs/benchmarks.md: gated metric {m!r} "
+            f"(benchmarks/compare.py) not documented"
+            for m in sorted(metrics) if m not in text]
+
+
 def main() -> int:
-    """Run both checks; print violations; exit 1 on any."""
-    violations = check_links() + check_docstrings()
+    """Run all checks; print violations; exit 1 on any."""
+    violations = (check_links() + check_docstrings() + check_service_api()
+                  + check_gate_tables())
     if violations:
         print(f"[docs] FAIL: {len(violations)} violation(s)")
         for v in violations:
